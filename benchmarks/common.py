@@ -1,0 +1,104 @@
+"""Shared benchmark infrastructure: datasets, cached indexes, ground truth.
+
+Scale: the paper's corpora shrunk to CPU-feasible sizes (documented in
+DESIGN.md §Paper-fidelity deviations). Indexes and brute-force ground truth
+are cached under results/bench_cache so the full `python -m benchmarks.run`
+pass stays within minutes.
+"""
+
+from __future__ import annotations
+
+import pickle
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import build_hnsw_bulk
+from repro.core.datasets import make_dataset
+from repro.core.hnsw import exact_topk
+from repro.core.uhnsw import UHNSW, UHNSWParams
+
+CACHE = Path(__file__).parent.parent / "results" / "bench_cache"
+
+# dataset -> n at benchmark scale (paper Table 1 shapes, shrunk)
+BENCH_SIZES = {
+    "sun": 4000,
+    "trevi": 1500,
+    "gist": 5000,
+    "deep": 8000,
+    "glove": 10000,
+    "sift": 20000,
+}
+N_QUERIES = 64
+K_DEFAULT = 50
+
+
+def _cached(name: str, fn):
+    CACHE.mkdir(parents=True, exist_ok=True)
+    path = CACHE / f"{name}.pkl"
+    if path.exists():
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    obj = fn()
+    with open(path, "wb") as f:
+        pickle.dump(obj, f)
+    return obj
+
+
+def get_dataset(name: str):
+    return _cached(
+        f"ds_{name}",
+        lambda: make_dataset(name, n=BENCH_SIZES[name], n_queries=N_QUERIES,
+                             seed=42),
+    )
+
+
+def get_uhnsw(name: str, m: int = 16, t: int = 300) -> UHNSW:
+    ds = get_dataset(name)
+
+    def build():
+        t0 = time.time()
+        g1 = build_hnsw_bulk(ds.data, 1.0, m=m, seed=0)
+        g2 = build_hnsw_bulk(ds.data, 2.0, m=m, seed=1)
+        print(f"  built {name} G1+G2 in {time.time() - t0:.0f}s", flush=True)
+        return g1, g2
+
+    g1, g2 = _cached(f"uhnsw_{name}_m{m}", build)
+    return UHNSW(g1, g2, UHNSWParams(t=t))
+
+
+def get_hnsw_lp(name: str, p: float, m: int = 16):
+    """Per-p HNSW baseline graph (what 'original HNSW' must build per p)."""
+    ds = get_dataset(name)
+    return _cached(
+        f"hnsw_{name}_p{p}_m{m}",
+        lambda: build_hnsw_bulk(ds.data, p, m=m, seed=0),
+    )
+
+
+def ground_truth(name: str, p: float, k: int = K_DEFAULT):
+    ds = get_dataset(name)
+
+    def compute():
+        ids, dists = exact_topk(jnp.asarray(ds.data), jnp.asarray(ds.queries),
+                                p, k)
+        return np.asarray(ids), np.asarray(dists)
+
+    return _cached(f"gt_{name}_p{p}_k{k}", compute)
+
+
+def emit(rows: list[dict], name: str):
+    """Write a benchmark's rows to results/ as json; print CSV to stdout."""
+    import json
+
+    out = Path(__file__).parent.parent / "results" / f"{name}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    if rows:
+        keys = list(rows[0].keys())
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r[k]) for k in keys))
+    return rows

@@ -1,0 +1,57 @@
+"""Paper Fig. 2: recall of the Lp top-K inside the *true* base-metric top-t
+candidate set, as a function of p, for both base metrics (G1/L1, G2/L2).
+
+Claim under test: the two curves cross near p = 1.4 — the rationale for the
+base-index selection cutoff.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import K_DEFAULT, emit, get_dataset, ground_truth
+
+P_GRID = [0.5, 0.7, 0.9, 1.1, 1.2, 1.3, 1.4, 1.5, 1.6, 1.8, 2.0]
+T = 300
+DATASETS = ["sift", "gist"]
+
+
+def _candidate_recall(name: str, base_p: float, p: float, t: int, k: int):
+    true_base, _ = ground_truth(name, base_p, k=t)   # true top-t under base
+    true_lp, _ = ground_truth(name, p, k=k)          # true top-k under Lp
+    hits = 0
+    for i in range(true_lp.shape[0]):
+        hits += len(set(true_lp[i]) & set(true_base[i]))
+    return hits / true_lp.size
+
+
+def run(quick: bool = False):
+    datasets = DATASETS[:1] if quick else DATASETS
+    grid = P_GRID[::2] if quick else P_GRID
+    rows = []
+    for name in datasets:
+        get_dataset(name)
+        for p in grid:
+            r1 = _candidate_recall(name, 1.0, p, T, K_DEFAULT)
+            r2 = _candidate_recall(name, 2.0, p, T, K_DEFAULT)
+            rows.append({
+                "bench": "fig2", "dataset": name, "p": p,
+                "recall_G1_L1": round(r1, 4), "recall_G2_L2": round(r2, 4),
+            })
+    emit(rows, "fig2_recall_vs_p")
+    # crossover check
+    for name in datasets:
+        sub = [r for r in rows if r["dataset"] == name]
+        cross = None
+        for a, b in zip(sub, sub[1:]):
+            d_a = a["recall_G1_L1"] - a["recall_G2_L2"]
+            d_b = b["recall_G1_L1"] - b["recall_G2_L2"]
+            if d_a >= 0 and d_b < 0:
+                cross = (a["p"] + b["p"]) / 2
+        print(f"# {name}: G1/G2 recall crossover ~ p={cross} "
+              f"(paper: ~1.4)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,117 @@
+"""Roofline analysis (deliverable g): read the dry-run JSONs and emit the
+per-(arch x shape x mesh) three-term roofline table.
+
+  compute    = per_device_FLOPs / 197 TFLOP/s (bf16)
+  memory     = per_device_bytes / 819 GB/s
+  collective = per_device_collective_bytes / 50 GB/s per-link ICI
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens processed;
+the HLO/MODEL ratio surfaces remat + attention + dead compute overheads.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.configs.base import SHAPES, get_arch
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+HINTS = {
+    "collective": "shard the residual stream over 'model' (sequence "
+                  "parallelism) / fuse FSDP gathers across layers",
+    "memory": "raise arithmetic intensity: larger per-device microbatch, "
+              "bf16 loss chunks, fewer remat passes",
+    "compute": "already MXU-bound: improve achieved MFU via layout "
+               "(head-dim multiples of 128) and fused attention kernels",
+}
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def load_cells(directory: str) -> list[dict]:
+    cells = []
+    for path in sorted(Path(directory).glob("*.json")):
+        cells.append(json.loads(path.read_text()))
+    return cells
+
+
+def analyze(cells: list[dict]) -> list[dict]:
+    rows = []
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append({
+                "bench": "roofline", "arch": c["arch"], "shape": c["shape"],
+                "mesh": c.get("mesh", ""), "status": "skipped",
+                "compute_s": "", "memory_s": "", "collective_s": "",
+                "dominant": "", "model_flops_ratio": "",
+                "roofline_fraction": "", "hint": c.get("reason", ""),
+            })
+            continue
+        if c.get("status") != "ok":
+            continue
+        rf = c["roofline_seconds"]
+        dominant = max(rf, key=rf.get)
+        n_chips = c["n_chips"]
+        mf = model_flops(c["arch"], c["shape"]) / n_chips
+        hlo = c["per_device"]["flops"]
+        ratio = mf / hlo if hlo else 0.0
+        # roofline fraction: useful compute time / modeled step time
+        step_time = max(rf.values())
+        useful = mf / PEAK_FLOPS
+        frac = useful / step_time if step_time else 0.0
+        rows.append({
+            "bench": "roofline", "arch": c["arch"], "shape": c["shape"],
+            "mesh": c.get("mesh", ""), "status": "ok",
+            "compute_s": f"{rf['compute']:.4g}",
+            "memory_s": f"{rf['memory']:.4g}",
+            "collective_s": f"{rf['collective']:.4g}",
+            "dominant": dominant,
+            "model_flops_ratio": round(ratio, 3),
+            "roofline_fraction": round(frac, 4),
+            "hint": HINTS[dominant],
+        })
+    return rows
+
+
+def run(quick: bool = False, directory: str | None = None):
+    tables = (
+        [(directory, "roofline")]
+        if directory
+        else [
+            ("results/dryrun", "roofline"),
+            ("results/dryrun_opt", "roofline_opt"),
+            ("results/dryrun_mp", "roofline_mp"),
+        ]
+    )
+    all_rows = []
+    for d, name in tables:
+        if not Path(d).exists():
+            print(f"# no dry-run results under {d}; run "
+                  f"`python -m repro.launch.dryrun --all --out {d}` first")
+            continue
+        print(f"--- {name} ({d}) ---")
+        rows = analyze(load_cells(d))
+        emit(rows, name)
+        all_rows.extend(rows)
+    return all_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark aggregator: one function per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small dataset subset (CI mode)")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        fig1_lp_distance_cost,
+        fig2_recall_vs_p,
+        fig3_param_tuning,
+        fig4_uhnsw_vs_hnsw,
+        roofline,
+        table2_uhnsw_vs_mlsh,
+    )
+
+    benches = {
+        "fig1": fig1_lp_distance_cost.run,
+        "fig2": fig2_recall_vs_p.run,
+        "fig3": fig3_param_tuning.run,
+        "table2": table2_uhnsw_vs_mlsh.run,
+        "fig4": fig4_uhnsw_vs_hnsw.run,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    failures = []
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # keep going; report at the end
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+        print(f"===== {name} done in {time.time() - t0:.0f}s =====", flush=True)
+    if failures:
+        print("\nFAILED:", failures)
+        return 1
+    print("\nall benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,16 @@
+"""repro: U-HNSW (ANNS under universal Lp metrics) as a first-class retrieval
+feature of a multi-pod JAX LM training/serving framework.
+
+Layers:
+  repro.core       — the paper's contribution (U-HNSW, HNSW, MLSH baseline)
+  repro.kernels    — Pallas TPU kernels for Lp distance computation
+  repro.models     — LM model zoo (10 assigned architectures)
+  repro.dist       — mesh / sharding / collective helpers
+  repro.train      — training loop substrate
+  repro.serve      — prefill/decode serving substrate
+  repro.retrieval  — U-HNSW <-> LM integration (kNN-LM / RAG)
+  repro.checkpoint — sharded fault-tolerant checkpointing
+  repro.launch     — mesh construction, dry-run, train/serve entry points
+"""
+
+__version__ = "0.1.0"

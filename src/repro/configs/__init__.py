@@ -1,0 +1,15 @@
+"""Architecture configs: the 10 assigned architectures + the paper's own
+retrieval configs. Each <arch>.py exposes `config()` (the exact published
+configuration) and `smoke()` (a reduced same-family variant for CPU tests).
+"""
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    SHAPES,
+    get_arch,
+    list_archs,
+)

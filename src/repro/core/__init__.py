@@ -1,0 +1,14 @@
+"""The paper's primary contribution: U-HNSW — graph-based ANNS under universal Lp metrics.
+
+Public API:
+  metrics        — Lp distance computation (jnp) + TPU cost model
+  datasets       — synthetic dataset generators shaped like the paper's six corpora
+  build          — HNSW graph construction (L1 / L2 / arbitrary-Lp base metrics)
+  hnsw           — batched JAX beam search over a built HNSW graph
+  uhnsw          — Algorithm 1: base-index selection + early-terminated Lp verification
+  mlsh           — MLSH baseline (query-aware p-stable LSH, L1 + L0.5 indexes)
+"""
+
+from repro.core.metrics import lp_distance, pairwise_lp, rowwise_lp  # noqa: F401
+from repro.core.build import HNSWGraph, build_hnsw  # noqa: F401
+from repro.core.uhnsw import UHNSW, UHNSWParams, recall  # noqa: F401

@@ -1,0 +1,229 @@
+"""Batched JAX beam search over a frozen HNSW graph.
+
+HNSW traversal is pointer-chasing, which is hostile to TPU's dense execution
+model. We restructure it (DESIGN.md §2) as fixed-width tensor ops inside
+`jax.lax.while_loop`:
+
+  * upper layers: greedy descent, one `while_loop` per layer (layer count is
+    static per graph), each hop = gather M neighbors -> one batched base-metric
+    distance -> argmin;
+  * layer 0: classic ef-beam-search with the beam kept as a sorted (ef,)
+    array. Each hop expands the best unexpanded beam entry: gather its m0
+    neighbors, test-and-set a per-query visited *bitmask* (uint32 words,
+    carry-safe scatter-add of distinct bits), compute base-metric distances
+    for unseen neighbors, and merge via a single `lax.sort`.
+
+The whole search vmaps over the query batch and jits; query batches shard
+over the ('pod','data') mesh axes at serve time (see repro.retrieval).
+
+Distances here are *base metric* (L1/L2) — the cheap family (paper §2.1); we
+use root=False powers, which are ordering-equivalent. N_b (the number of
+base-metric Q2D evaluations, Eq. 1) is counted exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import HNSWGraph
+from repro.core.metrics import lp_distance
+
+
+@jax.tree_util.register_pytree_node_class
+class GraphArrays:
+    """Frozen device-resident HNSW topology. Padding sentinel is `n`.
+
+    Registered as a pytree with (n, metric_p) as *static* aux data so the
+    traversal code can specialize on them inside jit.
+    """
+
+    def __init__(self, adj0, upper_adj, upper_g2l, entry, n: int, metric_p: float):
+        self.adj0 = adj0          # (n, m0) int32 neighbor ids, pad = n
+        self.upper_adj = upper_adj  # per level l>=1: (n_l, m) global ids, pad = n
+        self.upper_g2l = upper_g2l  # per level l>=1: (n,) global->local, -1 absent
+        self.entry = entry        # () int32
+        self.n = n
+        self.metric_p = metric_p
+
+    def tree_flatten(self):
+        children = (self.adj0, self.upper_adj, self.upper_g2l, self.entry)
+        return children, (self.n, self.metric_p)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        adj0, upper_adj, upper_g2l, entry = children
+        return cls(adj0, upper_adj, upper_g2l, entry, aux[0], aux[1])
+
+    @classmethod
+    def from_graph(cls, g: HNSWGraph) -> "GraphArrays":
+        n = g.n
+
+        def pad(a):
+            a = np.asarray(a, dtype=np.int32).copy()
+            a[a < 0] = n
+            return jnp.asarray(a)
+
+        adj0 = pad(g.adjacency[0])
+        upper_adj = tuple(pad(a) for a in g.adjacency[1:])
+        upper_g2l = tuple(jnp.asarray(a) for a in g.local_index[1:])
+        return cls(
+            adj0=adj0,
+            upper_adj=upper_adj,
+            upper_g2l=upper_g2l,
+            entry=jnp.asarray(g.entry_point, dtype=jnp.int32),
+            n=n,
+            metric_p=g.metric_p,
+        )
+
+
+def _base_dist(q: jax.Array, x: jax.Array, p: float) -> jax.Array:
+    """Ordering-equivalent base-metric distance (root-free power sum)."""
+    return lp_distance(q, x, p, root=False)
+
+
+def _greedy_descend(q, X, adj_l, g2l, ep, ep_dist, nb, p, max_hops):
+    """Greedy ef=1 search on one upper layer. Returns (ep, ep_dist, nb)."""
+    n = X.shape[0]
+
+    def cond(s):
+        return s[0] & (s[5] < max_hops)
+
+    def body(s):
+        _, ep, ep_dist, nb, _, hops = s
+        nbrs = adj_l[g2l[ep]]  # (m,) global ids, pad = n
+        valid = nbrs < n
+        dv = _base_dist(q, X[jnp.clip(nbrs, 0, n - 1)], p)
+        dv = jnp.where(valid, dv, jnp.inf)
+        j = jnp.argmin(dv)
+        better = dv[j] < ep_dist
+        ep2 = jnp.where(better, nbrs[j], ep)
+        d2 = jnp.minimum(dv[j], ep_dist)
+        return (better, ep2, d2, nb + valid.sum(), j, hops + 1)
+
+    go = jnp.asarray(True)
+    s = (go, ep, ep_dist, nb, jnp.int32(0), jnp.int32(0))
+    s = jax.lax.while_loop(cond, body, s)
+    return s[1], s[2], s[3]
+
+
+def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops):
+    """Level-0 ef-beam search for one query. Returns (ids, dists, nb, hops)."""
+    n, m0 = X.shape[0], adj0.shape[1]
+    words = (n + 31) // 32
+
+    ids0 = jnp.full((ef,), n, dtype=jnp.int32).at[0].set(entry)
+    dist0 = jnp.full((ef,), jnp.inf, dtype=jnp.float32).at[0].set(entry_dist)
+    # sentinel slots start "expanded" so they are never selected
+    exp0 = jnp.ones((ef,), dtype=jnp.int32).at[0].set(0)
+    visited0 = jnp.zeros((words,), dtype=jnp.uint32)
+    visited0 = visited0.at[entry >> 5].set(jnp.uint32(1) << (entry.astype(jnp.uint32) & 31))
+
+    def cond(s):
+        ids, dist, exp, visited, nb, hops = s
+        active = (exp == 0) & (ids < n)
+        return jnp.any(active) & (hops < max_hops)
+
+    def body(s):
+        ids, dist, exp, visited, nb, hops = s
+        # 1. select the closest unexpanded beam entry
+        sel_key = jnp.where((exp == 0) & (ids < n), dist, jnp.inf)
+        j = jnp.argmin(sel_key)
+        exp = exp.at[j].set(1)
+        # 2. gather its neighbors, filter via the visited bitmask
+        nbrs = adj0[jnp.clip(ids[j], 0, n - 1)]  # (m0,)
+        valid = nbrs < n
+        safe = jnp.clip(nbrs, 0, n - 1)
+        word = safe >> 5
+        bit = jnp.uint32(1) << (safe.astype(jnp.uint32) & 31)
+        seen = (visited[word] & bit) != 0
+        new = valid & ~seen
+        # distinct ids -> distinct (word, bit); duplicates are masked to 0,
+        # so the scatter-add below is carry-free.
+        visited = visited.at[word].add(bit * new.astype(jnp.uint32))
+        # 3. batched base-metric distances for unseen neighbors only
+        dv = _base_dist(q, X[safe], p)
+        dv = jnp.where(new, dv, jnp.inf)
+        nb = nb + new.sum()
+        # 4. merge beam + frontier with a single sort, keep top-ef
+        all_ids = jnp.concatenate([ids, nbrs])
+        all_dist = jnp.concatenate([dist, dv])
+        # frontier entries join unexpanded; anything with inf distance
+        # (sentinels, masked duplicates) is flagged expanded so it can never
+        # be selected -> guarantees loop progress.
+        all_exp = jnp.concatenate([exp, jnp.zeros((m0,), jnp.int32)])
+        all_exp = jnp.where(jnp.isinf(all_dist), 1, all_exp)
+        sd, si, se = jax.lax.sort((all_dist, all_ids, all_exp), num_keys=1)
+        return (si[:ef], sd[:ef], se[:ef], visited, nb, hops + 1)
+
+    s = (ids0, dist0, exp0, visited0, nb0, jnp.int32(0))
+    ids, dist, exp, visited, nb, hops = jax.lax.while_loop(cond, body, s)
+    return ids, dist, nb, hops
+
+
+def _search_one(q, X, arrays: GraphArrays, ef: int, max_hops: int):
+    p = arrays.metric_p
+    n = arrays.n
+    ep = arrays.entry
+    ep_dist = _base_dist(q, X[ep], p)
+    nb = jnp.int32(1)
+    # descend upper layers, top to bottom (static python loop over levels)
+    for adj_l, g2l in zip(reversed(arrays.upper_adj), reversed(arrays.upper_g2l)):
+        ep, ep_dist, nb = _greedy_descend(
+            q, X, adj_l, g2l, ep, ep_dist, nb, p, max_hops
+        )
+    return _beam_search_l0(q, X, arrays.adj0, ep, ep_dist, nb, p, ef, max_hops)
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "t", "max_hops"))
+def knn_search(
+    arrays: GraphArrays,
+    X: jax.Array,
+    Q: jax.Array,
+    ef: int,
+    t: int,
+    max_hops: int = 4096,
+):
+    """Batched t-NN search under the graph's base metric.
+
+    Args:
+      arrays: frozen graph topology (GraphArrays.from_graph).
+      X: (n, d) dataset.
+      Q: (B, d) query batch.
+      ef: beam width (>= t).
+      t: number of candidates to return per query (paper's t).
+
+    Returns:
+      ids   (B, t) int32 candidate ids sorted by base-metric distance;
+      dists (B, t) base-metric distances (root-free powers);
+      n_b   (B,)   exact count of base-metric Q2D evaluations (Eq. 1 N_b);
+      hops  (B,)   level-0 hop counts.
+    """
+    assert ef >= t, (ef, t)
+    ids, dists, nb, hops = jax.vmap(
+        lambda q: _search_one(q, X, arrays, ef, max_hops)
+    )(Q)
+    return ids[:, :t], dists[:, :t], nb, hops
+
+
+def exact_topk(X: jax.Array, Q: jax.Array, p: float, k: int, chunk: int = 8192):
+    """Brute-force Lp top-k oracle (used for ground truth and recall)."""
+    from repro.core.metrics import pairwise_lp
+
+    n = X.shape[0]
+    best_d = jnp.full((Q.shape[0], k), jnp.inf)
+    best_i = jnp.full((Q.shape[0], k), -1, dtype=jnp.int32)
+    for start in range(0, n, chunk):
+        xc = X[start : start + chunk]
+        d = pairwise_lp(Q, xc, p, root=False)
+        ids = jnp.arange(start, start + xc.shape[0], dtype=jnp.int32)
+        ids = jnp.broadcast_to(ids, d.shape)
+        all_d = jnp.concatenate([best_d, d], axis=1)
+        all_i = jnp.concatenate([best_i, ids], axis=1)
+        sd, si = jax.lax.sort((all_d, all_i), num_keys=1)
+        best_d, best_i = sd[:, :k], si[:, :k]
+    return best_i, best_d

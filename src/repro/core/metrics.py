@@ -1,0 +1,159 @@
+"""Lp distance computation under universal p (paper §2.1).
+
+The paper's key systems observation is a *hardware cost asymmetry*:
+
+  p = 1, 2        -> basic arithmetic only (CPU: AVX-512 add/sub/mul; TPU: VPU
+                     full-rate elementwise, and for p=2 the MXU matmul identity
+                     ||x-y||^2 = ||x||^2 + ||y||^2 - 2<x,y>).
+  p = 0.5, 1.5    -> adds a sqrt (CPU: _mm512_sqrt_ps; TPU: VPU transcendental).
+  other p         -> needs |d|^p = exp(p*log|d|), two transcendentals per
+                     element -> more than an order of magnitude slower.
+
+This module provides the pure-jnp implementations (the Pallas kernels in
+repro.kernels mirror these exactly; kernels/ref.py re-exports from here) plus
+the analytic TPU op-cost model used by benchmarks/fig1_lp_distance_cost.py.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# p-values whose Lp distance evaluates without transcendentals (fast family).
+BASIC_PS = (1.0, 2.0)
+# p-values that need only a sqrt on top of basic arithmetic (paper §2.1).
+SQRT_PS = (0.5, 1.5)
+
+_EPS = 1e-30
+
+
+def _abs_diff_pow(diff: jax.Array, p: float) -> jax.Array:
+    """|diff|^p elementwise, using the cheapest op sequence for this p."""
+    a = jnp.abs(diff)
+    if p == 1.0:
+        return a
+    if p == 2.0:
+        return diff * diff
+    if p == 0.5:
+        return jnp.sqrt(a)
+    if p == 1.5:
+        return a * jnp.sqrt(a)
+    # General p: exp(p * log|d|), masking the log singularity at 0.
+    safe = jnp.maximum(a, _EPS)
+    return jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
+
+
+def _root(s: jax.Array, p: float) -> jax.Array:
+    """s^(1/p) elementwise (the outer root of the Lp norm)."""
+    if p == 1.0:
+        return s
+    if p == 2.0:
+        return jnp.sqrt(s)
+    if p == 0.5:
+        return s * s
+    safe = jnp.maximum(s, _EPS)
+    return jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / p))
+
+
+@partial(jax.jit, static_argnames=("p", "root"))
+def lp_distance(x: jax.Array, y: jax.Array, p: float, root: bool = True) -> jax.Array:
+    """Lp distance between broadcast-compatible vectors along the last axis.
+
+    With root=False returns sum(|x-y|^p) (same ordering, cheaper), which is
+    what the search loops use internally.
+    """
+    s = jnp.sum(_abs_diff_pow(x - y, p), axis=-1)
+    return _root(s, p) if root else s
+
+
+@partial(jax.jit, static_argnames=("p", "root"))
+def pairwise_lp(q: jax.Array, x: jax.Array, p: float, root: bool = True) -> jax.Array:
+    """All-pairs Lp distances: q (B, d) vs x (N, d) -> (B, N).
+
+    For p=2 uses the MXU-friendly matmul identity (this is the TPU analogue of
+    the paper's SIMD L2 fast path). Other p-values broadcast on the VPU.
+    """
+    if p == 2.0:
+        qq = jnp.sum(q * q, axis=-1)
+        xx = jnp.sum(x * x, axis=-1)
+        s = qq[:, None] + xx[None, :] - 2.0 * (q @ x.T)
+        s = jnp.maximum(s, 0.0)  # clamp fp cancellation
+        return jnp.sqrt(s) if root else s
+    s = jnp.sum(_abs_diff_pow(q[:, None, :] - x[None, :, :], p), axis=-1)
+    return _root(s, p) if root else s
+
+
+@partial(jax.jit, static_argnames=("p", "root"))
+def rowwise_lp(q: jax.Array, c: jax.Array, p: float, root: bool = True) -> jax.Array:
+    """Per-row candidate distances: q (B, d) vs c (B, C, d) -> (B, C).
+
+    This is the verification-step shape: each query has its own gathered
+    candidate block.
+    """
+    s = jnp.sum(_abs_diff_pow(q[:, None, :] - c, p), axis=-1)
+    return _root(s, p) if root else s
+
+
+# ---------------------------------------------------------------------------
+# Analytic TPU op-cost model (reproduces the *shape* of paper Fig. 1).
+#
+# Costs are in VPU-lane-cycles per element. Calibrated against the public
+# TPU ISA characterization: basic ALU ops are full rate (1), transcendentals
+# (sqrt/exp/log) occupy the slow path (~7 cycle-equivalents per element).
+# The MXU path for p=2 amortizes the d-dim reduction into a matmul running
+# at ~128x the VPU flop rate for large candidate tiles.
+# ---------------------------------------------------------------------------
+
+VPU_BASIC = 1.0
+VPU_TRANSCENDENTAL = 7.0
+MXU_SPEEDUP = 64.0  # effective matmul advantage at the tile sizes we use
+
+
+def lp_op_cost_per_element(p: float, use_mxu: bool = True) -> float:
+    """Modelled per-element cost (VPU-cycle-equivalents) of |x-y|^p summation."""
+    if p == 2.0:
+        # sub, mul, add -- and the mul+add ride the MXU in pairwise form.
+        return VPU_BASIC + 2.0 * VPU_BASIC / (MXU_SPEEDUP if use_mxu else 1.0)
+    if p == 1.0:
+        return 3.0 * VPU_BASIC  # sub, abs, add
+    if p in SQRT_PS:
+        extra = VPU_BASIC if p == 1.5 else 0.0  # p=1.5 also multiplies a*sqrt(a)
+        return 3.0 * VPU_BASIC + VPU_TRANSCENDENTAL + extra
+    # general p: sub, abs, log, mul, exp, add
+    return 4.0 * VPU_BASIC + 2.0 * VPU_TRANSCENDENTAL
+
+
+def lp_distance_cost_model(p: float, d: int, use_mxu: bool = True) -> float:
+    """Modelled cost (VPU-cycle-equivalents) of one d-dim Lp Q2D distance."""
+    per_elem = lp_op_cost_per_element(p, use_mxu=use_mxu)
+    # the outer root is O(1) per distance; include it for completeness
+    root_cost = 0.0 if p == 1.0 else VPU_TRANSCENDENTAL
+    return per_elem * d + root_cost
+
+
+def transcendental_op_count(p: float, d: int) -> int:
+    """Exact transcendental-op count of one d-dim Lp distance (root excluded)."""
+    if p in BASIC_PS:
+        return 0
+    if p in SQRT_PS:
+        return d
+    return 2 * d  # log + exp per element
+
+
+def base_metric_for(p: float, cutoff: float = 1.4) -> float:
+    """U-HNSW base-index selection rule (paper Alg. 1 line 3): G1 iff p <= 1.4."""
+    if not 0.5 <= p <= 2.0:
+        raise ValueError(f"p={p} outside the supported universal range [0.5, 2]")
+    return 1.0 if p <= cutoff else 2.0
+
+
+def numpy_lp(q, x, p: float, root: bool = True):
+    """NumPy oracle (no jit) used by tests and the CPU-side graph builder."""
+    import numpy as np
+
+    diff = np.abs(np.asarray(q)[..., None, :] - np.asarray(x)[None, :, :])
+    s = (diff**p).sum(axis=-1)
+    return s ** (1.0 / p) if root else s

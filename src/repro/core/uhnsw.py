@@ -1,0 +1,204 @@
+"""U-HNSW (paper Algorithm 1): ANNS under universal Lp metrics.
+
+Query processing for (q, p):
+  1. Candidate generation — select G1 (L1) if p <= 1.4 else G2 (L2), run the
+     batched JAX beam search (repro.core.hnsw) for the top-t candidates under
+     the base metric. t = 300 by default (paper §3.2).
+  2. Candidate verification — re-rank candidates under exact Lp, popping
+     batches of kappa and early-terminating when the running top-K stabilizes:
+     |R_new ∩ R| / K >= tau  (tau = target recall + 0.02 = 0.92 default).
+
+Batched SPMD adaptation (DESIGN.md §2): the verification loop runs with a
+vectorized convergence mask — queries that have already terminated stop
+counting Lp evaluations (their N_p is frozen), and the `lax.while_loop`
+exits when every query in the shard is done. This preserves the paper's
+per-query N_p savings while staying jittable.
+
+Special p values: for p == 1 or p == 2 the query *is* a base-metric search
+(paper §3 preamble) and the verification step is skipped entirely.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.build import HNSWGraph, build_hnsw
+from repro.core.hnsw import GraphArrays, knn_search
+from repro.core.metrics import base_metric_for, rowwise_lp
+
+
+@dataclass(frozen=True)
+class UHNSWParams:
+    """Query-time parameters (paper Algorithm 1 + §3.2)."""
+
+    t: int = 300          # candidate set size
+    tau: float = 0.92     # early-termination threshold (target recall + 0.02)
+    kappa: int | None = None  # verification batch size; None -> K // 2 (§3.1)
+    cutoff: float = 1.4   # base-index selection crossover (Fig. 2)
+    ef: int | None = None  # beam width for candidate generation; None -> 2t
+    max_hops: int = 4096
+
+
+class SearchStats(NamedTuple):
+    n_b: jax.Array        # (B,) base-metric Q2D evaluation counts
+    n_p: jax.Array        # (B,) Lp Q2D evaluation counts
+    iterations: jax.Array  # () verification loop iterations executed
+    base_p: float         # which base metric generated candidates
+
+
+@functools.partial(jax.jit, static_argnames=("p", "k", "kappa", "tau"))
+def verify_candidates(
+    Q: jax.Array,         # (B, d)
+    cand_ids: jax.Array,  # (B, t) sorted ascending by base-metric distance
+    X: jax.Array,         # (n, d)
+    p: float,
+    k: int,
+    kappa: int,
+    tau: float,
+):
+    """Early-terminated exact-Lp re-ranking (Algorithm 1 lines 7-11).
+
+    Returns (ids (B,k), dists (B,k) with root applied, n_p (B,), iters ()).
+    """
+    B, t = cand_ids.shape
+    n_batches = max((t - k) // kappa, 0)
+
+    def topk_merge(ids_a, d_a, ids_b, d_b):
+        ids = jnp.concatenate([ids_a, ids_b], axis=1)
+        d = jnp.concatenate([d_a, d_b], axis=1)
+        sd, si = jax.lax.sort((d, ids), num_keys=1)
+        return si[:, :k], sd[:, :k]
+
+    # line 7: R <- first K points of C (their Lp distances count toward N_p)
+    first = cand_ids[:, :k]
+    r_dist = rowwise_lp(Q, X[first], p, root=False)
+    r_dist, r_ids = jax.lax.sort((r_dist, first), num_keys=1)
+    n_p0 = jnp.full((B,), k, dtype=jnp.int32)
+
+    if n_batches == 0:
+        return r_ids, metrics._root(r_dist, p), n_p0, jnp.int32(0)
+
+    def cond(s):
+        i, _, _, done, _ = s
+        return (i < n_batches) & ~jnp.all(done)
+
+    def body(s):
+        i, r_ids, r_dist, done, n_p = s
+        start = k + i * kappa
+        batch = jax.lax.dynamic_slice(cand_ids, (0, start), (B, kappa))
+        bd = rowwise_lp(Q, X[batch], p, root=False)  # (B, kappa) exact Lp
+        new_ids, new_dist = topk_merge(r_ids, r_dist, batch, bd)
+        # |R_new ∩ R| via id-equality (ids are unique per query)
+        inter = (new_ids[:, :, None] == r_ids[:, None, :]).any(-1).sum(-1)
+        ratio = inter.astype(jnp.float32) / k
+        newly_done = ratio >= tau
+        keep = done[:, None]
+        r_ids = jnp.where(keep, r_ids, new_ids)
+        r_dist = jnp.where(keep, r_dist, new_dist)
+        n_p = n_p + jnp.where(done, 0, kappa)
+        return (i + 1, r_ids, r_dist, done | newly_done, n_p)
+
+    state = (jnp.int32(0), r_ids, r_dist, jnp.zeros((B,), bool), n_p0)
+    iters, r_ids, r_dist, done, n_p = jax.lax.while_loop(cond, body, state)
+    return r_ids, metrics._root(r_dist, p), n_p, iters
+
+
+class UHNSW:
+    """The paper's index: two HNSW graphs (G1 under L1, G2 under L2)."""
+
+    def __init__(self, g1: HNSWGraph, g2: HNSWGraph, params: UHNSWParams | None = None):
+        assert g1.metric_p == 1.0 and g2.metric_p == 2.0
+        self.g1, self.g2 = g1, g2
+        self.params = params or UHNSWParams()
+        self.X = jnp.asarray(g1.data)
+        self.arrays1 = GraphArrays.from_graph(g1)
+        self.arrays2 = GraphArrays.from_graph(g2)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        data: np.ndarray,
+        m: int = 32,
+        ef_construction: int = 500,
+        seed: int = 0,
+        params: UHNSWParams | None = None,
+        progress_every: int = 0,
+    ) -> "UHNSW":
+        g1 = build_hnsw(data, 1.0, m, ef_construction, seed, progress_every=progress_every)
+        g2 = build_hnsw(data, 2.0, m, ef_construction, seed + 1, progress_every=progress_every)
+        return cls(g1, g2, params)
+
+    def index_size_bytes(self, p_range_max: float = 2.0) -> int:
+        """Index size (excluding data). For the MLSH comparison (p <= 1) only
+        G1 is used, matching the paper's §4.2 accounting."""
+        if p_range_max <= 1.0:
+            return self.g1.index_size_bytes()
+        return self.g1.index_size_bytes() + self.g2.index_size_bytes()
+
+    # -- query --------------------------------------------------------------
+
+    def base_graph_for(self, p: float) -> tuple[GraphArrays, float]:
+        base = base_metric_for(p, self.params.cutoff)
+        return (self.arrays1, 1.0) if base == 1.0 else (self.arrays2, 2.0)
+
+    def search(self, Q, p: float, k: int):
+        """Batched ANNS-U-Lp query (Algorithm 1). Q: (B, d); one p per batch
+        (the host-level dispatcher groups a mixed-p stream by p; see
+        repro.retrieval.service)."""
+        prm = self.params
+        Q = jnp.asarray(Q, dtype=jnp.float32)
+        arrays, base_p = self.base_graph_for(p)
+        # bulk-built graphs want a beam wider than t (they trade the
+        # sequential builder's deep exploration for vectorized construction)
+        ef = prm.ef or 2 * prm.t
+        cand_ids, cand_dists, n_b, hops = knn_search(
+            arrays, self.X, Q, ef=max(ef, prm.t), t=prm.t, max_hops=prm.max_hops
+        )
+        if p == base_p:
+            # p equals the base metric: the graph's own ordering is exact
+            ids = cand_ids[:, :k]
+            dists = metrics._root(cand_dists[:, :k], p)
+            stats = SearchStats(n_b=n_b, n_p=jnp.zeros_like(n_b),
+                                iterations=jnp.int32(0), base_p=base_p)
+            return ids, dists, stats
+        kappa = prm.kappa or max(k // 2, 1)
+        ids, dists, n_p, iters = verify_candidates(
+            Q, cand_ids, self.X, p, k, kappa, prm.tau
+        )
+        return ids, dists, SearchStats(n_b=n_b, n_p=n_p, iterations=iters, base_p=base_p)
+
+    # -- paper Eq. 1 cost model ---------------------------------------------
+
+    def modeled_query_cost(self, stats: SearchStats, p: float, d: int) -> dict:
+        """T_query = N_b * T_b + N_p * T_p with the TPU op-cost model."""
+        t_b = metrics.lp_distance_cost_model(stats.base_p, d)
+        t_p = metrics.lp_distance_cost_model(p, d)
+        n_b = float(jnp.mean(stats.n_b))
+        n_p = float(jnp.mean(stats.n_p))
+        return {
+            "N_b": n_b,
+            "N_p": n_p,
+            "T_b": t_b,
+            "T_p": t_p,
+            "total": n_b * t_b + n_p * t_p,
+        }
+
+
+def recall(pred_ids, true_ids) -> float:
+    """Top-K recall |S* ∩ S| / K averaged over the query batch (paper §4.1.2)."""
+    pred = np.asarray(pred_ids)
+    true = np.asarray(true_ids)
+    k = true.shape[1]
+    hits = sum(
+        len(set(map(int, pred[i])) & set(map(int, true[i]))) for i in range(len(pred))
+    )
+    return hits / (len(pred) * k)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: Q2D Lp distance.
+
+The paper optimizes Lp distance computation with AVX-512 SIMD (its §2.1 /
+Fig. 1). On TPU the same hot-spot maps to VMEM-tiled Pallas kernels:
+
+  lp_distance.py — pairwise (B,d)x(N,d)->(B,N) and rowwise (B,d)x(B,C,d)->(B,C)
+                   distance kernels with per-p-family inner loops
+                   (L2 rides the MXU; L1/L0.5/L1.5 ride the VPU fast path;
+                   general p pays exp/log transcendentals).
+  ops.py         — jit'd dispatching wrappers with VMEM-aware tile selection.
+  ref.py         — pure-jnp oracles (re-exported from repro.core.metrics).
+"""
+
+from repro.kernels.ops import pallas_pairwise_lp, pallas_rowwise_lp  # noqa: F401

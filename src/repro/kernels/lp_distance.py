@@ -1,0 +1,192 @@
+"""Pallas TPU kernels for batched Q2D Lp distance (the paper's hot spot).
+
+Hardware mapping (see DESIGN.md §2):
+
+  * p = 2   — the MXU path. Inside each (TB, TN) output tile we compute
+              ||q-x||^2 = ||q||^2 + ||x||^2 - 2 q @ x^T with a single VMEM-
+              resident matmul (`jnp.dot` lowers onto the 128x128 systolic
+              array). This is the TPU analogue of the paper's AVX-512 L2.
+  * p = 1, 0.5, 1.5 — the VPU fast family: abs/add (+sqrt for the fractional
+              pair), full-rate elementwise over a (TN, d) diff tile per query
+              row, looped over the TB query rows with `lax.fori_loop` so the
+              VMEM working set stays one diff-tile wide.
+  * other p — the slow family: |d|^p = exp(p * log |d|) costs two
+              transcendentals per element; same loop structure.
+
+Tiling: grid is (B/TB, N/TN). Per grid step the kernel holds
+  q tile (TB, d) + x tile (TN, d) + one (TN, d) diff scratch + out (TB, TN)
+in VMEM; ops.py picks TB/TN so this fits the ~16 MiB v5e VMEM with headroom.
+The query tile is reused across the whole row of candidate tiles (index_map
+pins it per-i), amortizing its HBM read N/TN times — the VMEM analogue of
+the paper keeping the query vector L1-cache-resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-30
+
+
+def _abs_pow(diff, p: float):
+    """|diff|^p with the cheapest op sequence for this p (mirrors metrics)."""
+    a = jnp.abs(diff)
+    if p == 1.0:
+        return a
+    if p == 2.0:
+        return diff * diff
+    if p == 0.5:
+        return jnp.sqrt(a)
+    if p == 1.5:
+        return a * jnp.sqrt(a)
+    safe = jnp.maximum(a, _EPS)
+    return jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
+
+
+def _root(s, p: float):
+    if p == 1.0:
+        return s
+    if p == 2.0:
+        return jnp.sqrt(s)
+    if p == 0.5:
+        return s * s
+    safe = jnp.maximum(s, _EPS)
+    return jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / p))
+
+
+# ---------------------------------------------------------------------------
+# pairwise kernel: Q (B, d) x X (N, d) -> (B, N)
+# ---------------------------------------------------------------------------
+
+
+def _pairwise_l2_kernel(q_ref, x_ref, o_ref, *, root: bool):
+    """MXU path: one matmul per output tile."""
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    qq = jnp.sum(q * q, axis=-1)[:, None]
+    xx = jnp.sum(x * x, axis=-1)[None, :]
+    s = qq + xx - 2.0 * jnp.dot(q, x.T, preferred_element_type=jnp.float32)
+    s = jnp.maximum(s, 0.0)
+    o_ref[...] = (jnp.sqrt(s) if root else s).astype(o_ref.dtype)
+
+
+def _pairwise_vpu_kernel(q_ref, x_ref, o_ref, *, p: float, root: bool):
+    """VPU path: loop over query rows; one (TN, d) diff tile live at a time."""
+    x = x_ref[...].astype(jnp.float32)
+    tb = q_ref.shape[0]
+
+    def body(i, _):
+        qi = q_ref[i, :].astype(jnp.float32)
+        s = jnp.sum(_abs_pow(x - qi[None, :], p), axis=-1)
+        o_ref[i, :] = (_root(s, p) if root else s).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, tb, body, 0)
+
+
+def pairwise_lp_kernel_call(
+    q: jax.Array,
+    x: jax.Array,
+    p: float,
+    *,
+    root: bool = True,
+    block_b: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Raw pallas_call for pre-padded inputs (B % block_b == N % block_n == 0)."""
+    b, d = q.shape
+    n, _ = x.shape
+    assert b % block_b == 0 and n % block_n == 0, (b, n, block_b, block_n)
+
+    if p == 2.0:
+        kernel = functools.partial(_pairwise_l2_kernel, root=root)
+    else:
+        kernel = functools.partial(_pairwise_vpu_kernel, p=p, root=root)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), out_dtype),
+        interpret=interpret,
+    )(q, x)
+
+
+# ---------------------------------------------------------------------------
+# rowwise kernel: Q (B, d) x C (B, C, d) -> (B, C)
+# (the verification-step shape: per-query gathered candidate blocks)
+# ---------------------------------------------------------------------------
+
+
+def _rowwise_l2_kernel(q_ref, c_ref, o_ref, *, root: bool):
+    q = q_ref[...].astype(jnp.float32)  # (TB, d)
+    tb = q.shape[0]
+
+    def body(i, _):
+        c = c_ref[i, :, :].astype(jnp.float32)  # (TC, d)
+        qi = q[i, :]
+        s = jnp.sum(qi * qi) + jnp.sum(c * c, axis=-1) - 2.0 * jnp.dot(
+            c, qi, preferred_element_type=jnp.float32
+        )
+        s = jnp.maximum(s, 0.0)
+        o_ref[i, :] = (jnp.sqrt(s) if root else s).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, tb, body, 0)
+
+
+def _rowwise_vpu_kernel(q_ref, c_ref, o_ref, *, p: float, root: bool):
+    tb = q_ref.shape[0]
+
+    def body(i, _):
+        qi = q_ref[i, :].astype(jnp.float32)
+        c = c_ref[i, :, :].astype(jnp.float32)
+        s = jnp.sum(_abs_pow(c - qi[None, :], p), axis=-1)
+        o_ref[i, :] = (_root(s, p) if root else s).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, tb, body, 0)
+
+
+def rowwise_lp_kernel_call(
+    q: jax.Array,
+    c: jax.Array,
+    p: float,
+    *,
+    root: bool = True,
+    block_b: int = 8,
+    block_c: int = 256,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Raw pallas_call for pre-padded inputs (B % block_b == C % block_c == 0)."""
+    b, d = q.shape
+    b2, cc, _ = c.shape
+    assert b == b2 and b % block_b == 0 and cc % block_c == 0
+
+    if p == 2.0:
+        kernel = functools.partial(_rowwise_l2_kernel, root=root)
+    else:
+        kernel = functools.partial(_rowwise_vpu_kernel, p=p, root=root)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b, cc // block_c),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_c, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, cc), out_dtype),
+        interpret=interpret,
+    )(q, c)

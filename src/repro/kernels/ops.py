@@ -1,0 +1,125 @@
+"""Jit'd dispatching wrappers over the Pallas Lp distance kernels.
+
+Responsibilities:
+  * VMEM-aware tile-size selection (the BlockSpec working set must fit VMEM);
+  * padding arbitrary (B, N, C) up to tile multiples and slicing the result;
+  * interpret-mode fallback on non-TPU backends (this container is CPU-only,
+    so tests/benches run the kernel bodies in interpret mode; on a real TPU
+    the same code lowers to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lp_distance as _k
+
+# VMEM budget we allow a single kernel instance to claim (bytes). v5e has
+# ~16 MiB per core; leave room for double-buffering of input tiles.
+_VMEM_BUDGET = 6 * 1024 * 1024
+_LANE = 128  # TPU lane width: last-dim tiles should be multiples of this
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_tiles_pairwise(b: int, n: int, d: int) -> tuple[int, int]:
+    """Choose (TB, TN). Working set ~ 4*(TB*d + 2*TN*d + TB*TN) bytes."""
+    # Start from the preferred MXU-aligned tiles and shrink TN for large d.
+    tb = min(128, _round_up(b, 8))
+    tn = 512
+    while tn > _LANE and 4 * (tb * d + 2 * tn * d + tb * tn) > _VMEM_BUDGET:
+        tn //= 2
+    while tb > 8 and 4 * (tb * d + 2 * tn * d + tb * tn) > _VMEM_BUDGET:
+        tb //= 2
+    return max(tb, 8), max(tn, _LANE)
+
+
+def _pick_tiles_rowwise(b: int, c: int, d: int) -> tuple[int, int]:
+    """Choose (TB, TC). Working set ~ 4*(TB*d + 2*TB*TC*d) bytes."""
+    tb = min(8, _round_up(b, 1))
+    tc = min(512, _round_up(c, _LANE))
+    while tc > _LANE and 4 * (tb * d + 2 * tb * tc * d) > _VMEM_BUDGET:
+        tc //= 2
+    while tb > 1 and 4 * (tb * d + 2 * tb * tc * d) > _VMEM_BUDGET:
+        tb //= 2
+    return max(tb, 1), max(tc, _LANE)
+
+
+def _pad_axis(a: jax.Array, axis: int, to: int, fill: float) -> jax.Array:
+    pad = to - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "root", "interpret", "block_b", "block_n")
+)
+def pallas_pairwise_lp(
+    q: jax.Array,
+    x: jax.Array,
+    p: float,
+    root: bool = True,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Pairwise Lp distances (B, d) x (N, d) -> (B, N) via the Pallas kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, d = q.shape
+    n, _ = x.shape
+    tb, tn = _pick_tiles_pairwise(b, n, d)
+    if block_b is not None:
+        tb = block_b
+    if block_n is not None:
+        tn = block_n
+    bp, np_ = _round_up(b, tb), _round_up(n, tn)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    xp = _pad_axis(x, 0, np_, 0.0)
+    out = _k.pairwise_lp_kernel_call(
+        qp, xp, p, root=root, block_b=tb, block_n=tn, interpret=interpret
+    )
+    return out[:b, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "root", "interpret", "block_b", "block_c")
+)
+def pallas_rowwise_lp(
+    q: jax.Array,
+    c: jax.Array,
+    p: float,
+    root: bool = True,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+) -> jax.Array:
+    """Rowwise Lp distances (B, d) x (B, C, d) -> (B, C) via the Pallas kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, d = q.shape
+    _, cc, _ = c.shape
+    tb, tc = _pick_tiles_rowwise(b, cc, d)
+    if block_b is not None:
+        tb = block_b
+    if block_c is not None:
+        tc = block_c
+    bp, cp = _round_up(b, tb), _round_up(cc, tc)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    cpad = _pad_axis(_pad_axis(c, 1, cp, 0.0), 0, bp, 0.0)
+    out = _k.rowwise_lp_kernel_call(
+        qp, cpad, p, root=root, block_b=tb, block_c=tc, interpret=interpret
+    )
+    return out[:b, :cc]

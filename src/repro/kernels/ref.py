@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for the Lp distance kernels.
+
+The single source of truth for Lp semantics is repro.core.metrics; the
+kernels must match these to float tolerance across all shapes/dtypes/p.
+"""
+
+from repro.core.metrics import (  # noqa: F401
+    lp_distance,
+    numpy_lp,
+    pairwise_lp,
+    rowwise_lp,
+)
+
+# Aliases matching the kernel entry points one-to-one.
+pairwise_lp_ref = pairwise_lp
+rowwise_lp_ref = rowwise_lp

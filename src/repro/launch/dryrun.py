@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, extract memory/cost/collective analyses.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+other import, including jax — device count locks at first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama_1_1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+Options: --multi-pod (2x16x16 instead of 16x16), --remat, --microbatches N.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_arch
+from repro.dist.sharding import Runtime
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs, state_specs
+from repro.models.model import decode_step, prefill
+from repro.train.step import TrainConfig, make_train_step
+
+# TPU v5e hardware constants (per chip) for the roofline terms
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9_]+\[[^\]=]*\][^\s]*\)?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind byte totals from the compiled HLO (per-device shapes)."""
+    out: dict[str, dict] = {}
+    seen_done = set()
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        op = m.group("op")
+        # async pairs (-start/-done) would double count; the regex strips the
+        # suffix so both match — count each line once via span dedup
+        if m.start() in seen_done:
+            continue
+        seen_done.add(m.start())
+        b = _shape_bytes(m.group("shape"))
+        d = out.setdefault(op, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    return out
+
+
+def analyze_compiled(lowered, compiled, mesh) -> dict:
+    from repro.launch.hlo_cost import analyze_hlo
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca = ca or {}
+    txt = compiled.as_text()
+    # loop-aware accounting: XLA's HloCostAnalysis counts while bodies once,
+    # which undercounts scan-over-layers models by the layer count
+    loop_aware = analyze_hlo(txt)
+    n_chips = mesh.devices.size
+    flops = loop_aware["flops"]                    # per-device
+    bytes_accessed = loop_aware["bytes_accessed"]
+    coll_bytes = loop_aware["collective_bytes"]
+    return {
+        "n_chips": int(n_chips),
+        "per_device": {
+            "flops": flops,
+            "bytes_accessed": bytes_accessed,
+            "collective_bytes": coll_bytes,
+            "transcendentals": loop_aware["transcendentals"],
+            "xla_flops_unscaled": float(ca.get("flops", 0.0)),
+            "xla_bytes_unscaled": float(ca.get("bytes accessed", 0.0)),
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "collectives": loop_aware["collectives"],
+        "roofline_seconds": {
+            "compute": flops / PEAK_FLOPS,
+            "memory": bytes_accessed / HBM_BW,
+            "collective": coll_bytes / ICI_BW,
+        },
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             remat: bool = True, microbatches: int = 1,
+             rules: dict | None = None, verbose: bool = True,
+             explicit_tp: bool = False, seq_shard: bool = False,
+             moe_decode_gather: bool = False, full_dp: bool = False,
+             weights_once: bool = False) -> dict:
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch_id, "shape": shape_name, "status": "skipped",
+                "reason": "full-attention arch; long_500k needs sub-quadratic "
+                          "attention (DESIGN.md §Arch-applicability)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rt = Runtime(mesh=mesh, remat=remat and shape.kind == "train",
+                 rules=rules or {}, explicit_tp=explicit_tp,
+                 seq_shard=seq_shard, moe_decode_gather=moe_decode_gather,
+                 full_dp=full_dp)
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            tc = TrainConfig(microbatches=microbatches,
+                             weights_once=weights_once)
+            step = make_train_step(cfg, rt, tc)
+            state = state_specs(cfg, rt)
+            batch = batch_specs(cfg, shape, rt, microbatches=microbatches)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+        elif shape.kind == "prefill":
+            fn = lambda p, b: prefill(p, b, cfg, rt)
+            state = state_specs(cfg, rt)["params"]
+            batch = batch_specs(cfg, shape, rt)
+            lowered = jax.jit(fn).lower(state, batch)
+        else:  # decode
+            fn = lambda p, t, c, pos: decode_step(p, t, c, pos, cfg, rt)
+            params = state_specs(cfg, rt)["params"]
+            tokens, cache, pos = decode_specs(cfg, shape, rt)
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                params, tokens, cache, pos
+            )
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    result = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "remat": rt.remat,
+        "microbatches": microbatches,
+        **analyze_compiled(lowered, compiled, mesh),
+    }
+    if verbose:
+        ma = result["per_device"]
+        rf = result["roofline_seconds"]
+        print(
+            f"  {arch_id} x {shape_name} [{result['mesh']}]: "
+            f"args={ma['argument_bytes']/2**30:.2f}GiB "
+            f"temp={ma['temp_bytes']/2**30:.2f}GiB "
+            f"flops={ma['flops']:.3g} coll={ma['collective_bytes']/2**20:.1f}MiB | "
+            f"roofline c/m/x = {rf['compute']:.3g}/{rf['memory']:.3g}/"
+            f"{rf['collective']:.3g}s "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+            flush=True,
+        )
+    return result
+
+
+def optimized_settings(arch_id: str, shape_name: str) -> dict:
+    """Per-family winning settings from the EXPERIMENTS.md §Perf hillclimb:
+      * weights-stationary MoE for all MoE decode cells (34x / 11.5x);
+      * full-DP (ZeRO-3, no TP) for <10B dense/ssm/hybrid archs (7.7x
+        collective term, fits HBM);
+      * gradient-accumulation microbatching for every train cell
+        (liveness /mb at equal FLOPs); deepseek uses mb=4 — the expert
+        FSDP-gather collective grows with mb, measured optimum.
+    """
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    s: dict = {}
+    if cfg.moe and shape.kind == "decode":
+        s["moe_decode_gather"] = True
+    # full-DP only where measured to win: small GQA-dense TRAIN cells.
+    # Counter-measurements: recurrent mixers (RG-LRU/SSD scans) and MHA
+    # (musicgen) go pathological under GSPMD when channel dims replicate,
+    # and decode batches (128 < 256 chips) fall back to replicated caches.
+    small = cfg.moe is None and cfg.param_count() < 10e9 and cfg.family == "dense"
+    if small and shape.kind == "train":
+        s["full_dp"] = True
+    if shape.kind == "train":
+        if s.get("full_dp"):
+            # full-DP already runs 1 sequence/device; microbatching would
+            # make the slice (gb/mb) indivisible by the chip count and GSPMD
+            # falls back to a replicated batch (measured: 146x regression)
+            pass
+        elif arch_id == "deepseek_v3_671b":
+            s["microbatches"] = 4
+        else:
+            s["microbatches"] = 16
+    return s
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--explicit-tp", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--moe-decode-gather", action="store_true")
+    ap.add_argument("--full-dp", action="store_true")
+    ap.add_argument("--weights-once", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-family §Perf winning settings")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        todo = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        todo = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch_id, shape_name in todo:
+        for mp in meshes:
+            kw = dict(
+                remat=not args.no_remat,
+                microbatches=args.microbatches,
+                explicit_tp=args.explicit_tp,
+                seq_shard=args.seq_shard,
+                moe_decode_gather=args.moe_decode_gather,
+                full_dp=args.full_dp,
+                weights_once=args.weights_once,
+            )
+            if args.optimized:
+                kw.update(optimized_settings(arch_id, shape_name))
+            try:
+                r = run_cell(arch_id, shape_name, multi_pod=mp, **kw)
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                r = {"arch": arch_id, "shape": shape_name,
+                     "mesh": "2x16x16" if mp else "16x16",
+                     "status": "error", "error": f"{type(e).__name__}: {e}"}
+            results.append(r)
+            if args.out:
+                path = Path(args.out)
+                path.mkdir(parents=True, exist_ok=True)
+                name = f"{arch_id}__{shape_name}__{r.get('mesh', 'na')}.json"
+                (path / name).write_text(json.dumps(r, indent=2))
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\ndry-run: {len(results)} cells, {len(bad)} errors", flush=True)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before the
+first jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
+
+    Axis semantics: 'pod' = inter-pod DP (DCN), 'data' = intra-pod DP/FSDP,
+    'model' = tensor/expert parallelism (ICI).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_with_stage_axis(stages: int, data: int, model: int):
+    """Pipeline-parallel mesh hook (documented, not used by the baseline
+    512-chip configuration — DP x FSDP x TP covers it; see DESIGN.md §5)."""
+    return jax.make_mesh((stages, data, model), ("stage", "data", "model"))

@@ -1,0 +1,80 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import Runtime, logical_to_spec, param_struct
+from repro.models.model import cache_specs
+from repro.models.params import param_specs, _map_specs, ParamSpec
+
+
+def _sds(shape, dtype, rt: Runtime, logical):
+    sh = NamedSharding(rt.mesh, logical_to_spec(logical, shape, rt))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime,
+                microbatches: int = 1) -> dict:
+    """Train/prefill batch ShapeDtypeStructs (tokens or stub-frontend frames)."""
+    gb, s = shape.global_batch, shape.seq_len
+    if microbatches > 1:
+        assert gb % microbatches == 0, (gb, microbatches)
+        gb = gb // microbatches  # per-microbatch slice
+
+    def lead(dims, logical):
+        if microbatches > 1:
+            return (microbatches, *dims), (None, *logical)
+        return dims, logical
+
+    out = {}
+    if cfg.frontend and shape.kind in ("train", "prefill"):
+        dims, logical = lead((gb, s, cfg.frontend_dim), ("batch", None, None))
+        out["frames"] = _sds(dims, jnp.bfloat16, rt, logical)
+    else:
+        dims, logical = lead((gb, s), ("batch", None))
+        out["tokens"] = _sds(dims, jnp.int32, rt, logical)
+    if shape.kind == "train":
+        dims, logical = lead((gb, s), ("batch", None))
+        out["labels"] = _sds(dims, jnp.int32, rt, logical)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime):
+    """(tokens, cache, pos) ShapeDtypeStructs for serve_step lowering."""
+    gb, s = shape.global_batch, shape.seq_len
+    tokens = _sds((gb, 1), jnp.int32, rt, ("batch", None))
+
+    def mk(spec: ParamSpec):
+        sh = NamedSharding(rt.mesh, logical_to_spec(spec.logical, spec.shape, rt))
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sh)
+
+    cache = _map_specs(mk, cache_specs(cfg, gb, s))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, cache, pos
+
+
+def state_specs(cfg: ArchConfig, rt: Runtime, grad_compression: bool = False):
+    """Train-state ShapeDtypeStructs: bf16 params + fp32 AdamW moments."""
+    specs = param_specs(cfg)
+    params = param_struct(specs, rt)
+
+    def f32_like(s: ParamSpec):
+        sh = NamedSharding(rt.mesh, logical_to_spec(s.logical, s.shape, rt))
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=sh)
+
+    opt = {
+        "m": _map_specs(f32_like, specs),
+        "v": _map_specs(f32_like, specs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state = {"params": params, "opt": opt}
+    if grad_compression:
+        state["err"] = _map_specs(f32_like, specs)
+    return state

@@ -1,0 +1,140 @@
+"""Training entry point with checkpoint/restart fault tolerance.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+  # failure injection (integration-tested): crash at step 7, then rerun with
+  # the same --ckpt-dir to resume from the last checkpoint
+  ... --fail-at-step 7
+
+Use launch/supervisor.py to get automatic restart-on-failure semantics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs.base import get_arch
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist.sharding import Runtime, spec_shardings
+from repro.launch.mesh import make_local_mesh
+from repro.models.params import param_specs, _map_specs
+from repro.train.monitor import HeartbeatMonitor
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+def state_shardings(cfg, rt, tc: TrainConfig):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.sharding import logical_to_spec
+    from repro.models.params import ParamSpec
+
+    specs = param_specs(cfg)
+    p_sh = spec_shardings(specs, rt)
+    f_sh = p_sh  # moments share the param shardings
+    state = {
+        "params": p_sh,
+        "opt": {"m": f_sh, "v": f_sh,
+                "step": NamedSharding(rt.mesh, P())},
+    }
+    if tc.grad_compression:
+        state["err"] = f_sh
+    return state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data", type=int, default=1, help="data mesh axis size")
+    ap.add_argument("--model", type=int, default=1, help="model mesh axis size")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--fail-at-step", type=int, default=-1,
+                    help="crash deliberately at this step (fault-tolerance test)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--metrics-out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    mesh = make_local_mesh(args.data, args.model)
+    rt = Runtime(mesh=mesh, remat=args.remat)
+    tc = TrainConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                     total_steps=args.steps,
+                     microbatches=args.microbatches,
+                     grad_compression=args.grad_compression)
+
+    pipe = SyntheticTokenPipeline(cfg, args.batch, args.seq, seed=args.seed)
+    step_fn = make_train_step(cfg, rt, tc)
+
+    start = 0
+    with jax.sharding.set_mesh(mesh):
+        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            skeleton = jax.eval_shape(
+                lambda: init_train_state(cfg, rt, tc, jax.random.PRNGKey(args.seed))
+            )
+            shardings = state_shardings(cfg, rt, tc)
+            state, start = restore_checkpoint(args.ckpt_dir, skeleton, shardings)
+            start += 1
+            print(f"resumed from step {start - 1}", flush=True)
+        else:
+            state = init_train_state(cfg, rt, tc, jax.random.PRNGKey(args.seed))
+
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+        ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+        hb = HeartbeatMonitor(f"{args.ckpt_dir}/heartbeat.json") if args.ckpt_dir else None
+        losses = []
+        for step in range(start, args.steps):
+            if step == args.fail_at_step:
+                print(f"FAULT-INJECTION: crashing at step {step}", flush=True)
+                sys.stdout.flush()
+                raise SystemExit(42)
+            batch = pipe.batch(step)
+            if tc.microbatches > 1:
+                batch = jax.tree.map(
+                    lambda a: a.reshape(tc.microbatches,
+                                        a.shape[0] // tc.microbatches,
+                                        *a.shape[1:]),
+                    batch,
+                )
+            t0 = time.time()
+            state, metrics = jit_step(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if hb:
+                hb.beat(step, {"loss": loss})
+            if step % args.log_every == 0:
+                print(f"step {step}: loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"({time.time() - t0:.2f}s)", flush=True)
+            if ckpt and (step + 1) % args.save_every == 0:
+                ckpt.save(step, state)
+        if ckpt:
+            ckpt.save(args.steps - 1, state)
+            ckpt.wait()
+    if args.metrics_out:
+        import json
+        from pathlib import Path
+        Path(args.metrics_out).write_text(json.dumps({"losses": losses}))
+    print(f"done: final loss {losses[-1] if losses else float('nan'):.4f}",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,20 @@
+"""LM model zoo: composable blocks covering the 10 assigned architectures.
+
+Block taxonomy (each layer = sequence mixer + channel mixer):
+  sequence mixers : gqa | local_gqa | mla | rglru | ssd
+  channel mixers  : ffn (swiglu / squared_relu / gelu) | moe | none
+
+Layers stack via lax.scan over run-length-encoded segments of identical
+layer kinds (keeps HLO size O(1) in depth — required to compile 96-layer
+models for 512 devices on the CPU host).
+"""
+
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.params import param_specs, count_params  # noqa: F401

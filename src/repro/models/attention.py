@@ -1,0 +1,410 @@
+"""Attention mixers: GQA (full/local) + MLA, train and decode paths.
+
+Train/prefill attention is a pure-JAX flash formulation: scan over query
+chunks with an inner `fori_loop` over only the *causally reachable* (and,
+for local attention, window-reachable) KV chunks, carrying online-softmax
+statistics. This keeps peak memory at one (Tq, Tk) score tile per head
+group and avoids the 2x FLOP waste of rectangular masking — important both
+for the real TPU target and for honest roofline FLOP counts.
+
+Decode attends one query position against the whole KV cache. The cache is
+sequence-sharded over the 'model' mesh axis (GQA kv_heads are too few to
+shard 16-way); the softmax reduction over the sharded axis is expressed
+with ordinary jnp ops + sharding constraints so GSPMD inserts the
+FlashDecoding-style partial-max/partial-sum collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+_NEG = -1e30
+
+
+def rmsnorm(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, hd), positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+class FlashCarry(NamedTuple):
+    acc: jax.Array  # (B, Tq, KV, G, vd) fp32
+    m: jax.Array    # (B, Tq, KV, G) running max
+    l: jax.Array    # (B, Tq, KV, G) running denom
+
+
+def _chunk_mask(q_pos, k_pos, window):
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, window, chunk_q, chunk_k, scale):
+    """Returns (out (B,S,KV,G,vd), lse (B,S,KV,G)). Exact causal/window FLOPs:
+    the inner fori only visits reachable KV chunks (dynamic bounds are fine
+    forward-only; the backward is a custom VJP below)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    vd = v.shape[-1]
+    g = h // kv
+    nq, nk = s // chunk_q, s // chunk_k
+    qr = q.reshape(b, nq, chunk_q, kv, g, hd)
+    kr = k.reshape(b, nk, chunk_k, kv, hd)
+    vr = v.reshape(b, nk, chunk_k, kv, vd)
+
+    def q_chunk_body(_, i):
+        qc = qr[:, i]
+        q_pos = i * chunk_q + jnp.arange(chunk_q)
+        j_hi = (i + 1) * chunk_q // chunk_k
+        if window is None:
+            j_lo = jnp.int32(0)
+        else:
+            j_lo = jnp.maximum(i * chunk_q - (window - 1), 0) // chunk_k
+
+        def kv_body(j, carry: FlashCarry):
+            kc, vc = kr[:, j], vr[:, j]
+            k_pos = j * chunk_k + jnp.arange(chunk_k)
+            scores = jnp.einsum(
+                "bqkgd,btkd->bqkgt", qc, kc, preferred_element_type=jnp.float32
+            ) * scale
+            mask = _chunk_mask(q_pos, k_pos, window)
+            scores = jnp.where(mask[None, :, None, None, :], scores, _NEG)
+            m_new = jnp.maximum(carry.m, scores.max(axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(carry.m - m_new)
+            l_new = carry.l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bqkgt,btkd->bqkgd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            return FlashCarry(carry.acc * alpha[..., None] + pv, m_new, l_new)
+
+        init = FlashCarry(
+            jnp.zeros((b, chunk_q, kv, g, vd), jnp.float32),
+            jnp.full((b, chunk_q, kv, g), _NEG, jnp.float32),
+            jnp.zeros((b, chunk_q, kv, g), jnp.float32),
+        )
+        carry = jax.lax.fori_loop(j_lo, j_hi, kv_body, init)
+        l_safe = jnp.maximum(carry.l, 1e-30)
+        out = (carry.acc / l_safe[..., None]).astype(q.dtype)
+        lse = carry.m + jnp.log(l_safe)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_chunk_body, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, kv, g, vd)
+    lse = jnp.moveaxis(lses, 0, 1).reshape(b, s, kv, g)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, window, chunk_q, chunk_k, scale):
+    """FlashAttention backward: scan over KV chunks (accumulating dk, dv),
+    inner dynamic fori over the reachable q chunks, dq accumulated in the
+    carry. Same exact-causal FLOP structure as forward."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    vd = v.shape[-1]
+    g = h // kv
+    nq, nk = s // chunk_q, s // chunk_k
+    qr = q.reshape(b, nq, chunk_q, kv, g, hd)
+    kr = k.reshape(b, nk, chunk_k, kv, hd)
+    vr = v.reshape(b, nk, chunk_k, kv, vd)
+    dor = do.reshape(b, nq, chunk_q, kv, g, vd)
+    lser = lse.reshape(b, nq, chunk_q, kv, g)
+    # delta_i = rowsum(do * out)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    deltar = delta.reshape(b, nq, chunk_q, kv, g)
+
+    def kv_chunk_body(dq_acc, j):
+        kc, vc = kr[:, j], vr[:, j]
+        k_pos = j * chunk_k + jnp.arange(chunk_k)
+        i_lo = (j * chunk_k) // chunk_q
+        if window is None:
+            i_hi = nq
+        else:
+            i_hi = jnp.minimum(
+                ((j + 1) * chunk_k - 1 + window - 1) // chunk_q + 1, nq
+            )
+
+        def q_body(i, carry):
+            dq_acc, dk_j, dv_j = carry
+            qc = qr[:, i]
+            doc = dor[:, i]
+            q_pos = i * chunk_q + jnp.arange(chunk_q)
+            scores = jnp.einsum(
+                "bqkgd,btkd->bqkgt", qc, kc, preferred_element_type=jnp.float32
+            ) * scale
+            mask = _chunk_mask(q_pos, k_pos, window)
+            p = jnp.where(
+                mask[None, :, None, None, :],
+                jnp.exp(scores - lser[:, i][..., None]), 0.0,
+            )
+            dv_j = dv_j + jnp.einsum(
+                "bqkgt,bqkgd->btkd", p, doc.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            dp = jnp.einsum(
+                "bqkgd,btkd->bqkgt", doc, vc, preferred_element_type=jnp.float32
+            )
+            ds = p * (dp - deltar[:, i][..., None]) * scale
+            dq_i = jnp.einsum(
+                "bqkgt,btkd->bqkgd", ds, kc, preferred_element_type=jnp.float32
+            )
+            dq_acc = jax.lax.dynamic_update_index_in_dim(
+                dq_acc, dq_acc[:, i] + dq_i, i, axis=1
+            )
+            dk_j = dk_j + jnp.einsum(
+                "bqkgt,bqkgd->btkd", ds, qc.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return dq_acc, dk_j, dv_j
+
+        dk0 = jnp.zeros((b, chunk_k, kv, hd), jnp.float32)
+        dv0 = jnp.zeros((b, chunk_k, kv, vd), jnp.float32)
+        dq_acc, dk_j, dv_j = jax.lax.fori_loop(
+            i_lo, i_hi, q_body, (dq_acc, dk0, dv0)
+        )
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, nq, chunk_q, kv, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_chunk_body, dq0, jnp.arange(nk))
+    dq = dq.reshape(b, s, kv, g, hd).reshape(b, s, h, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, s, kv, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, s, kv, vd).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_core(q, k, v, window, chunk_q, chunk_k, scale):
+    out, _ = _flash_fwd_impl(q, k, v, window, chunk_q, chunk_k, scale)
+    return out
+
+
+def _flash_core_fwd(q, k, v, window, chunk_q, chunk_k, scale):
+    out, lse = _flash_fwd_impl(q, k, v, window, chunk_q, chunk_k, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(window, chunk_q, chunk_k, scale, res, g_out):
+    q, k, v, out, lse = res
+    b, s, kv, grp, vd = out.shape
+    do = g_out.reshape(b, s, kv * grp, vd)
+    out_flat = out.reshape(b, s, kv * grp, vd)
+    lse_flat = lse
+    dq, dk, dv = _flash_bwd_impl(
+        q, k, v, out_flat, lse_flat.reshape(b, s, kv, grp), do,
+        window, chunk_q, chunk_k, scale,
+    )
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, S, H, hd)
+    k: jax.Array,   # (B, S, KV, hd)
+    v: jax.Array,   # (B, S, KV, vd)
+    *,
+    window: int | None = None,
+    chunk_q: int = 512,
+    chunk_k: int = 512,
+    scale: float | None = None,
+) -> jax.Array:
+    """Causal (optionally windowed) flash attention with custom VJP.
+
+    Both directions touch only causally/window-reachable KV chunks, so HLO
+    FLOPs equal the true attention FLOPs (no rectangular masking waste) —
+    this matters for the roofline accounting as much as for speed."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    vd = v.shape[-1]
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    chunk_q = min(chunk_q, s)
+    chunk_k = min(chunk_k, s)
+    assert s % chunk_q == 0 and s % chunk_k == 0, (s, chunk_q, chunk_k)
+    out = _flash_core(q, k, v, window, chunk_q, chunk_k, scale)
+    return out.reshape(b, s, h, vd)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S_max, KV, hd)
+    v_cache: jax.Array,  # (B, S_max, KV, vd)
+    pos: jax.Array,      # () current position (number of cached tokens)
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """One-token attention against the full cache (dense; GSPMD shards S)."""
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qh = q.reshape(b, kv, g, hd) * scale
+    scores = jnp.einsum(
+        "bkgd,btkd->bkgt", qh, k_cache, preferred_element_type=jnp.float32
+    )
+    k_pos = jnp.arange(k_cache.shape[1])
+    mask = k_pos[None, :] <= pos
+    if window is not None:
+        mask &= (pos - k_pos[None, :]) < window
+    scores = jnp.where(mask[:, None, None, :], scores, _NEG)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bkgt,btkd->bkgd", (p / l).astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def gqa_forward(params, x, positions, cfg: ArchConfig, *, window=None):
+    """Full-sequence GQA (train / prefill). Returns (out, (k, v))."""
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", h, params["wq"])
+    k = jnp.einsum("bsd,dke->bske", h, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", h, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = flash_attention(q, k, v, window=window)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), (k, v)
+
+
+def gqa_decode(params, x, k_cache, v_cache, pos, cfg: ArchConfig, *, window=None):
+    """Single-token GQA. Returns (out, (k_new, v_new)) — caller updates cache.
+
+    Windowed (local) attention uses a *ring buffer* cache of exactly
+    `window` slots (write at pos % window): keys keep their absolute-rotary
+    embedding, so attention over the ring needs no extra window masking —
+    that sizing is what makes long_500k decode O(window) for the hybrid
+    archs. Full attention is the window = cache_len special case of the
+    same formula."""
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", h, params["wq"])
+    k = jnp.einsum("bsd,dke->bske", h, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", h, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    cache_len = k_cache.shape[1]
+    write_idx = jnp.mod(pos, cache_len)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, write_idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, write_idx, axis=1)
+    out = decode_attention(q, k_cache, v_cache, pos)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def _mla_qkv(params, h, positions, cfg: ArchConfig):
+    m = cfg.mla
+    q_lat = rmsnorm(
+        jnp.einsum("bsd,dr->bsr", h, params["wq_a"]), params["q_norm"], cfg.norm_eps
+    )
+    q = jnp.einsum("bsr,rhe->bshe", q_lat, params["wq_b"])
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", h, params["wkv_a"])
+    c_kv = rmsnorm(kv_a[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank :][:, :, None, :]  # (B, S, 1, rope_hd)
+    k_rope = rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(params, x, positions, cfg: ArchConfig):
+    """Full-sequence MLA: expand per-head K/V from the latent (train mode)."""
+    m = cfg.mla
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, h, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, params["wv_b"])
+    n_heads = cfg.n_heads
+    k_rope_b = jnp.broadcast_to(
+        k_rope, (*k_rope.shape[:2], n_heads, m.rope_head_dim)
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    out = flash_attention(q_full, k_full, v, scale=scale)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), (c_kv, k_rope)
+
+
+def mla_decode(params, x, ckv_cache, krope_cache, pos, cfg: ArchConfig):
+    """Absorbed-matrix MLA decode: score directly against the latent cache.
+
+    scores = (q_nope @ W_uk) . c_kv + q_rope . k_rope — the per-head K is
+    never materialized; the value path likewise contracts the latent first.
+    This is the memory-optimal MLA serving mode (DeepSeek-V3 §MLA).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, h, positions, cfg)
+
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(ckv_cache, c_kv_new, pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, k_rope_new, pos, axis=1
+    )
+
+    # absorb W_uk into q: (B,1,H,nope) x (r,H,nope) -> (B,H,r)
+    q_lat = jnp.einsum("bshe,rhe->bhr", q_nope, params["wk_b"])
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    scores = (
+        jnp.einsum("bhr,btr->bht", q_lat, ckv_cache, preferred_element_type=jnp.float32)
+        + jnp.einsum(
+            "bshe,bte->bht", q_rope, krope_cache[:, :, 0, :],
+            preferred_element_type=jnp.float32,
+        )
+    ) * scale
+    k_pos = jnp.arange(ckv_cache.shape[1])
+    scores = jnp.where(k_pos[None, None, :] <= pos, scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum(
+        "bht,btr->bhr", p.astype(ckv_cache.dtype), ckv_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.einsum("bhr,rhe->bhe", ctx_lat.astype(x.dtype), params["wv_b"])
+    out = jnp.einsum("bhe,hed->bd", out, params["wo"])[:, None, :]
+    return out, (ckv_cache, krope_cache)

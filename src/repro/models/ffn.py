@@ -1,0 +1,231 @@
+"""Channel mixers: dense FFN variants + expert-parallel MoE.
+
+MoE runs inside `shard_map` for explicit, predictable collectives
+(DESIGN.md §5):
+
+  * tokens arrive data-sharded (batch over ('pod','data')), replicated over
+    'model';
+  * experts are sharded over 'model' (expert parallelism) and their d_model
+    axis is FSDP-sharded over ('pod','data') — each layer all-gathers its
+    expert weights over the FSDP axes (ZeRO-3 semantics, required to fit
+    671B-class models);
+  * every model rank redundantly computes the (deterministic) router for its
+    token shard, gathers the top-C tokens per *local* expert (capacity
+    semantics: lowest-probability overflow drops, standard top-k capacity
+    MoE), runs the expert FFNs as batched einsums, scatter-adds weighted
+    outputs, and psums partial outputs over 'model'.
+
+The psum combine is the baseline; EXPERIMENTS.md §Perf evaluates the
+all-to-all alternative.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import rmsnorm
+
+
+def _act(cfg: ArchConfig, gate_or_pre, pre=None):
+    if cfg.ffn_act == "swiglu":
+        return jax.nn.silu(gate_or_pre) * pre
+    if cfg.ffn_act == "squared_relu":
+        r = jax.nn.relu(gate_or_pre)
+        return r * r
+    if cfg.ffn_act == "gelu":
+        return jax.nn.gelu(gate_or_pre)
+    raise ValueError(cfg.ffn_act)
+
+
+def ffn_forward(params, x, cfg: ArchConfig, rt=None):
+    from repro.dist.tp import col_matmul_ffn, row_matmul_ffn
+
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    if rt is None or not rt.explicit_tp:
+        pre = jnp.einsum("bsd,df->bsf", h, params["wi"])
+        if cfg.ffn_act == "swiglu":
+            act = _act(cfg, jnp.einsum("bsd,df->bsf", h, params["wg"]), pre)
+        else:
+            act = _act(cfg, pre)
+        return jnp.einsum("bsf,fd->bsd", act, params["wo"])
+    pre = col_matmul_ffn(h, params["wi"], rt)
+    if cfg.ffn_act == "swiglu":
+        act = _act(cfg, col_matmul_ffn(h, params["wg"], rt), pre)
+    else:
+        act = _act(cfg, pre)
+    return row_matmul_ffn(act, params["wo"], rt)
+
+
+def _shared_expert(params, h, cfg: ArchConfig):
+    pre = jnp.einsum("bsd,df->bsf", h, params["ws_in"])
+    if cfg.ffn_act == "swiglu":
+        act = _act(cfg, jnp.einsum("bsd,df->bsf", h, params["ws_gate"]), pre)
+    else:
+        act = _act(cfg, pre)
+    return jnp.einsum("bsf,fd->bsd", act, params["ws_out"])
+
+
+def _capacity(t: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(t * m.top_k / m.num_experts * m.capacity_factor)
+    c = max(8, (c + 7) // 8 * 8)
+    return min(t, c)
+
+
+def _moe_decode_gather(params, h, cfg: ArchConfig, rt):
+    """Weights-stationary decode MoE (EXPERIMENTS.md §Perf, deepseek cell).
+
+    The baseline path FSDP-gathers full expert weights per layer — at decode
+    that moves ~GBs of parameters to process a handful of tokens. Here the
+    weights never move: the *tokens* (tiny at decode) are all-gathered over
+    the dp axes, every device applies its (E_loc, d_loc) weight shard with
+    the d-contraction completed by a psum over dp, and the (tokens, d_loc)
+    partial outputs return to the batch-sharded layout with one small
+    all-to-all. Collective volume scales with tokens, not parameters.
+    """
+    m = cfg.moe
+    b, s, d = h.shape
+    has_gate = cfg.ffn_act == "swiglu"
+    dp, tp = rt.dp_axes, rt.tp_axis
+    e_total = m.num_experts
+
+    def inner(h_loc, router, w_in, w_gate, w_out):
+        # h_loc (B_loc, 1, d); w_* (E_loc, d_loc, f) / (E_loc, f, d_loc)
+        x = jax.lax.all_gather(h_loc, dp, axis=0, tiled=True)  # (B, 1, d)
+        t = x.shape[0]
+        xt = x.reshape(t, d)
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        vals, ids = jax.lax.top_k(probs, m.top_k)
+        vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+        e_loc = e_total // rt.tp_size
+        rank = jax.lax.axis_index(tp)
+        local_ids = rank * e_loc + jnp.arange(e_loc)
+        match = ids[:, :, None] == local_ids[None, None, :]
+        gate = jnp.einsum("tk,tke->te", vals, match.astype(vals.dtype))
+        score = jnp.where(gate > 0, gate, -1.0)
+        # generous decode capacity: drops at decode are a serving bug, and
+        # the dense (e_loc, cap) compute is tiny at single-token batches
+        cap = min(t, max(16, int(t * m.top_k / e_total * max(m.capacity_factor, 2.0)) + 8))
+        top_gate, top_idx = jax.lax.top_k(score.T, cap)  # (e_loc, cap)
+        valid = top_gate > 0
+        # d-contraction on the local d_loc slice, completed by a dp psum
+        d_loc = w_in.shape[1]
+        drank = 0
+        for ax in rt.dp_axes:  # linearized dp rank
+            drank = drank * rt.mesh.shape[ax] + jax.lax.axis_index(ax)
+        xe = jnp.take(xt, top_idx.reshape(-1), axis=0).reshape(e_loc, cap, d)
+        xe_loc = jax.lax.dynamic_slice_in_dim(xe, drank * d_loc, d_loc, axis=2)
+        pre = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xe_loc, w_in), dp)
+        if has_gate:
+            g = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xe_loc, w_gate), dp)
+            act = jax.nn.silu(g) * pre
+        else:
+            act = _act(cfg, pre)
+        ye = jnp.einsum("ecf,efd->ecd", act, w_out)  # (e_loc, cap, d_loc)
+        w_comb = jnp.where(valid, top_gate, 0.0).astype(ye.dtype)
+        ye = ye * w_comb[:, :, None]
+        out = jnp.zeros((t, d_loc), ye.dtype).at[top_idx.reshape(-1)].add(
+            ye.reshape(-1, d_loc)
+        )
+        out = jax.lax.psum(out, tp)  # (t, d_loc), complete over experts
+        # (t, d_loc) -> (t_loc, d): transpose layouts with one all-to-all
+        bl = t // rt.dp_size
+        out = out.reshape(rt.dp_size, bl, d_loc)
+        ex = jax.lax.all_to_all(
+            out, dp, split_axis=0, concat_axis=0, tiled=True
+        )  # (ranks, bl, d_loc), indexed by source (= d-slice) rank
+        out = jnp.moveaxis(ex, 0, 1).reshape(bl, 1, d)
+        return out
+
+    w_gate = params.get("w_gate", params["w_in"])
+    out = shard_map(
+        inner,
+        mesh=rt.mesh,
+        in_specs=(
+            P(dp, None, None),
+            P(None, None),
+            P(tp, dp, None),
+            P(tp, dp, None),
+            P(tp, None, dp),
+        ),
+        out_specs=P(dp, None, None),
+        check_rep=False,
+    )(h, params["router"], params["w_in"], w_gate, params["w_out"])
+    if m.n_shared:
+        out = out + _shared_expert(params, h, cfg)
+    return out
+
+
+def moe_forward(params, x, cfg: ArchConfig, rt):
+    """Expert-parallel MoE. x: (B, S, d) data-sharded. rt: Runtime (mesh)."""
+    m = cfg.moe
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    b, s, d = h.shape
+    if rt.moe_decode_gather and s == 1 and rt.dp_size > 1:
+        return _moe_decode_gather(params, h, cfg, rt)
+    cap = _capacity(max(b * s // rt.dp_size, 1), cfg)
+    has_gate = cfg.ffn_act == "swiglu"
+    dp, tp = rt.dp_axes, rt.tp_axis
+
+    def inner(h_loc, router, w_in, w_gate, w_out):
+        # h_loc (B_loc, S, d); w_* (E_loc, d_loc, f) / (E_loc, f, d_loc)
+        bl, sl, _ = h_loc.shape
+        t = bl * sl
+        xt = h_loc.reshape(t, d)
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        vals, ids = jax.lax.top_k(probs, m.top_k)  # (t, k)
+        vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+
+        e_loc = m.num_experts // rt.tp_size
+        rank = jax.lax.axis_index(tp)
+        local_ids = rank * e_loc + jnp.arange(e_loc)  # global expert ids
+        # gate (t, e_loc): combine weight if token routed to local expert
+        match = ids[:, :, None] == local_ids[None, None, :]  # (t, k, e_loc)
+        gate = jnp.einsum("tk,tke->te", vals, match.astype(vals.dtype))
+        score = jnp.where(gate > 0, gate, -1.0)
+        top_gate, top_idx = jax.lax.top_k(score.T, cap)  # (e_loc, cap)
+        valid = top_gate > 0
+
+        # FSDP: re-materialize full expert weights for this layer
+        w_in_f = jax.lax.all_gather(w_in, dp, axis=1, tiled=True)
+        w_out_f = jax.lax.all_gather(w_out, dp, axis=2, tiled=True)
+        xe = jnp.take(xt, top_idx.reshape(-1), axis=0).reshape(e_loc, cap, d)
+        pre = jnp.einsum("ecd,edf->ecf", xe, w_in_f)
+        if has_gate:
+            w_g_f = jax.lax.all_gather(w_gate, dp, axis=1, tiled=True)
+            act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_g_f)) * pre
+        else:
+            act = _act(cfg, pre)
+        ye = jnp.einsum("ecf,efd->ecd", act, w_out_f)
+        w_comb = jnp.where(valid, top_gate, 0.0).astype(ye.dtype)
+        ye = ye * w_comb[:, :, None]
+        out = jnp.zeros((t, d), ye.dtype).at[top_idx.reshape(-1)].add(
+            ye.reshape(-1, d)
+        )
+        out = jax.lax.psum(out, tp)
+        return out.reshape(bl, sl, d)
+
+    w_gate = params.get("w_gate", params["w_in"])  # placeholder when not gated
+    out = shard_map(
+        inner,
+        mesh=rt.mesh,
+        in_specs=(
+            P(dp, None, None),
+            P(None, None),
+            P(tp, dp, None),
+            P(tp, dp, None),
+            P(tp, None, dp),
+        ),
+        out_specs=P(dp, None, None),
+        check_rep=False,
+    )(h, params["router"], params["w_in"], w_gate, params["w_out"])
+
+    if m.n_shared:
+        out = out + _shared_expert(params, h, cfg)
+    return out

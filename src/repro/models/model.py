@@ -1,0 +1,361 @@
+"""Model assembly: embedding -> scanned block segments -> loss / decode.
+
+Layer stacking uses lax.scan over run-length-encoded segments of identical
+layer kinds (see params.layer_plan): each segment's parameters are stacked
+on a leading 'layers' axis, so HLO size is O(#segments), not O(depth).
+Activation remat (jax.checkpoint) wraps each scan body when rt.remat.
+
+Cross-entropy is computed in sequence chunks against the vocab-sharded head
+so the full (B, S, V) logits tensor never materializes (V up to 256k).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import Runtime, constrain
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import recurrent as rec
+from repro.models.params import (
+    ParamSpec,
+    layer_plan,
+    padded_vocab,
+    param_specs,
+)
+
+LOSS_CHUNK = 1024
+MTP_WEIGHT = 0.3
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontends
+# ---------------------------------------------------------------------------
+
+
+def embed_input(params, batch: dict, cfg: ArchConfig):
+    """tokens (B,S) int32 -> embeddings; or stub-frontend frames (B,S,fd)."""
+    if "frames" in batch:
+        return jnp.einsum("bsf,fd->bsd", batch["frames"],
+                          params["frontend_proj"])
+    tokens = batch["tokens"]
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(kind: str, bp, x, positions, cfg: ArchConfig, rt: Runtime):
+    """One layer (sequence mixer + channel mixer), full-sequence mode.
+
+    Returns (x, cache_entry) — cache entries feed the decode path when this
+    runs as prefill."""
+    if kind == "ssd":
+        y, state = rec.ssd_forward(bp["mixer"], x, cfg)
+        return x + y, {"state": state[0], "tail": state[1]}
+    mixer, channel = kind.split("+")
+    if mixer in ("gqa", "local_attn"):
+        window = cfg.local_window if mixer == "local_attn" else None
+        y, (k, v) = attn.gqa_forward(bp["mixer"], x, positions, cfg, window=window)
+        cache = {"k": k, "v": v}
+    elif mixer == "mla":
+        y, (ckv, krope) = attn.mla_forward(bp["mixer"], x, positions, cfg)
+        cache = {"ckv": ckv, "krope": krope}
+    elif mixer == "rglru":
+        y, (state, tail) = rec.rglru_forward(bp["mixer"], x, cfg)
+        cache = {"state": state, "tail": tail}
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if channel == "ffn":
+        x = x + ffn_mod.ffn_forward(bp["channel"], x, cfg, rt)
+    elif channel == "moe":
+        x = x + ffn_mod.moe_forward(bp["channel"], x, cfg, rt)
+    return x, cache
+
+
+def _apply_block_decode(kind: str, bp, x, cache, pos, cfg: ArchConfig, rt: Runtime):
+    """One layer, single-token decode mode. Returns (x, new_cache)."""
+    if kind == "ssd":
+        y, (state, tail) = rec.ssd_decode(bp["mixer"], x, cache["state"],
+                                          cache["tail"], cfg)
+        return x + y, {"state": state, "tail": tail}
+    mixer, channel = kind.split("+")
+    if mixer in ("gqa", "local_attn"):
+        window = cfg.local_window if mixer == "local_attn" else None
+        y, (k_c, v_c) = attn.gqa_decode(bp["mixer"], x, cache["k"], cache["v"],
+                                        pos, cfg, window=window)
+        new_cache = {"k": k_c, "v": v_c}
+    elif mixer == "mla":
+        y, (ckv, krope) = attn.mla_decode(bp["mixer"], x, cache["ckv"],
+                                          cache["krope"], pos, cfg)
+        new_cache = {"ckv": ckv, "krope": krope}
+    elif mixer == "rglru":
+        y, (state, tail) = rec.rglru_decode(bp["mixer"], x, cache["state"],
+                                            cache["tail"], cfg)
+        new_cache = {"state": state, "tail": tail}
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if channel == "ffn":
+        x = x + ffn_mod.ffn_forward(bp["channel"], x, cfg, rt)
+    elif channel == "moe":
+        x = x + ffn_mod.moe_forward(bp["channel"], x, cfg, rt)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# backbone
+# ---------------------------------------------------------------------------
+
+
+def _backbone(params, x, positions, cfg: ArchConfig, rt: Runtime,
+              collect_cache: bool = False):
+    """Scan the segment stack. Returns (hidden, cache_segments|None)."""
+    plan = layer_plan(cfg)
+    caches = []
+    for (unit, repeats), seg in zip(plan, params["segments"]):
+
+        def seg_body(h, blocks, unit=unit):
+            h = constrain(h, rt, ("batch", "seq_act", "embed_act"))
+            entries = []
+            for kind, bp in zip(unit, blocks):
+                h, entry = _apply_block(kind, bp, h, positions, cfg, rt)
+                entries.append(entry)
+            return h, entries if collect_cache else None
+
+        body = jax.checkpoint(seg_body) if rt.remat else seg_body
+        x, ys = jax.lax.scan(body, x, seg["blocks"])
+        caches.append(ys)
+    return x, caches if collect_cache else None
+
+
+def forward_train(params, batch, cfg: ArchConfig, rt: Runtime):
+    """Full-sequence forward -> final hidden states (B, S, d)."""
+    x = embed_input(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _ = _backbone(params, x, positions, cfg, rt)
+    return attn.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def _head_matrix(params, cfg: ArchConfig):
+    if cfg.tie_embeddings or "lm_head" not in params:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def _chunked_xent(hidden, labels, head, cfg: ArchConfig):
+    """Mean next-token cross-entropy without materializing (B, S, V)."""
+    b, s, d = hidden.shape
+    v_real = cfg.vocab_size
+    chunk = min(LOSS_CHUNK, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d)
+    ls = labels.reshape(b, nc, chunk)
+
+    def body(carry, inp):
+        h, y = inp  # (B, C, d), (B, C)
+        logits = jnp.einsum("bcd,dv->bcv", h, head).astype(jnp.float32)
+        # mask padded vocab entries out of the partition function
+        v_pad = logits.shape[-1]
+        if v_pad > v_real:
+            pad_mask = jnp.arange(v_pad) >= v_real
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(y, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (y >= 0).astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + ((lse - gold) * valid).sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)),
+        (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ls, 1, 0)),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, rt: Runtime):
+    """Next-token LM loss (+ DeepSeek-style MTP auxiliary when configured).
+
+    batch: {"tokens" | "frames", "labels" (B, S) with -1 padding}.
+    """
+    hidden = forward_train(params, batch, cfg, rt)
+    head = _head_matrix(params, cfg)
+    labels = batch["labels"]
+    # shift: hidden[t] predicts labels[t] (labels are pre-shifted by the
+    # pipeline: labels[t] = tokens[t+1])
+    loss = _chunked_xent(hidden, labels, head, cfg)
+    metrics = {"lm_loss": loss}
+    if cfg.mtp_heads:
+        # multi-token prediction: predict labels shifted one step further
+        mtp_labels = jnp.concatenate(
+            [labels[:, 1:], jnp.full_like(labels[:, :1], -1)], axis=1
+        )
+        mtp_loss = _chunked_xent(hidden, mtp_labels, params["mtp_head"], cfg)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + MTP_WEIGHT * mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: cache specs, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ArchConfig, batch: int, s_max: int) -> list:
+    """ParamSpec tree for the decode cache, aligned with params['segments'].
+
+    Attention caches shard sequence over 'model' (cache_seq) and batch over
+    dp; recurrent states shard their channel dim over 'model'."""
+    plan = layer_plan(cfg)
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    segs = []
+    for unit, repeats in plan:
+        entries = []
+        for kind in unit:
+            if kind == "ssd":
+                s = cfg.ssm
+                d_in = s.expand * d
+                nh = d_in // s.head_dim
+                gn = s.n_groups * s.state_dim
+                entries.append({
+                    "state": ParamSpec(
+                        (repeats, batch, nh, s.state_dim, s.head_dim),
+                        ("layers", "batch", "inner", None, None), jnp.float32),
+                    "tail": ParamSpec(
+                        (repeats, batch, s.conv_width - 1, d_in + 2 * gn),
+                        ("layers", "batch", None, "inner"), jnp.bfloat16),
+                })
+                continue
+            mixer, _ = kind.split("+")
+            if mixer in ("gqa", "local_attn"):
+                # local attention caches a ring buffer of `window` slots
+                s_len = min(s_max, cfg.local_window) if mixer == "local_attn" else s_max
+                entries.append({
+                    "k": ParamSpec(
+                        (repeats, batch, s_len, cfg.n_kv_heads, hd),
+                        ("layers", "batch", "cache_seq", "kv", "head"),
+                        jnp.bfloat16),
+                    "v": ParamSpec(
+                        (repeats, batch, s_len, cfg.n_kv_heads, hd),
+                        ("layers", "batch", "cache_seq", "kv", "head"),
+                        jnp.bfloat16),
+                })
+            elif mixer == "mla":
+                m = cfg.mla
+                entries.append({
+                    "ckv": ParamSpec(
+                        (repeats, batch, s_max, m.kv_lora_rank),
+                        ("layers", "batch", "cache_seq", None), jnp.bfloat16),
+                    "krope": ParamSpec(
+                        (repeats, batch, s_max, 1, m.rope_head_dim),
+                        ("layers", "batch", "cache_seq", None, None),
+                        jnp.bfloat16),
+                })
+            elif mixer == "rglru":
+                w = cfg.ssm.conv_width if cfg.ssm else 4
+                entries.append({
+                    "state": ParamSpec((repeats, batch, d),
+                                       ("layers", "batch", "inner"),
+                                       jnp.float32),
+                    "tail": ParamSpec((repeats, batch, w - 1, d),
+                                      ("layers", "batch", None, "inner"),
+                                      jnp.bfloat16),
+                })
+        segs.append(entries)
+    return segs
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, rt: Runtime):
+    from repro.models.params import _map_specs
+    from repro.dist.sharding import logical_to_spec
+    from jax.sharding import NamedSharding
+
+    def mk(s: ParamSpec):
+        sh = NamedSharding(rt.mesh, logical_to_spec(s.logical, s.shape, rt))
+        return jnp.zeros(s.shape, s.dtype, device=sh)
+
+    return _map_specs(mk, cache_specs(cfg, batch, s_max))
+
+
+def prefill(params, batch, cfg: ArchConfig, rt: Runtime, s_max: int | None = None):
+    """Full-sequence forward that also materializes the decode cache.
+
+    Returns (last_hidden (B, 1, d), cache). Attention caches come out sized
+    (R, B, S, ...); pass s_max > S to right-pad for subsequent decode.
+    """
+    x = embed_input(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, caches = _backbone(params, x, positions, cfg, rt, collect_cache=True)
+    hidden = attn.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+    def pad_seq(a, axis):
+        if s_max is None or a.shape[axis] >= s_max:
+            return a
+        pad = [(0, 0)] * a.ndim
+        pad[axis] = (0, s_max - a.shape[axis])
+        return jnp.pad(a, pad)
+
+    fixed = []
+    for entries in caches:
+        seg_entries = []
+        for entry in entries:
+            e = dict(entry)
+            for key in ("k", "v", "ckv", "krope"):
+                if key in e:
+                    e[key] = pad_seq(e[key], axis=2)  # (R, B, S, ...)
+            for key in ("state",):
+                if key in e and e[key].dtype != jnp.float32:
+                    e[key] = e[key].astype(jnp.float32)
+            seg_entries.append(e)
+        fixed.append(seg_entries)
+    return hidden[:, -1:, :], fixed
+
+
+def decode_step(params, tokens, cache, pos, cfg: ArchConfig, rt: Runtime):
+    """One decode step. tokens: (B, 1) int32; pos: () int32 — number of
+    tokens already in the cache. Returns (logits (B, 1, V), new_cache)."""
+    x = embed_input(params, {"tokens": tokens}, cfg)
+    plan = layer_plan(cfg)
+    new_cache = []
+    for (unit, repeats), seg, seg_cache in zip(plan, params["segments"], cache):
+
+        def seg_body(h, xs, unit=unit):
+            blocks, entries = xs
+            new_entries = []
+            for kind, bp, entry in zip(unit, blocks, entries):
+                h, ne = _apply_block_decode(kind, bp, h, entry, pos, cfg, rt)
+                new_entries.append(ne)
+            return h, new_entries
+
+        x, updated = jax.lax.scan(seg_body, x, (seg["blocks"], seg_cache))
+        new_cache.append(updated)
+    hidden = attn.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = _head_matrix(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, head)
+    return logits, new_cache
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    from repro.models.params import init_params as _init
+
+    return _init(cfg, key, dtype)

@@ -1,0 +1,206 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma) and Mamba2 SSD.
+
+Both are implemented in their TPU-native chunked/scan forms:
+  * RG-LRU uses `jax.lax.associative_scan` over the (decay, input) pairs —
+    log-space decays in fp32 for stability;
+  * SSD uses the chunked state-space-duality algorithm (Mamba2 §6): quadratic
+    attention-like intra-chunk einsums (MXU food) + a linear inter-chunk
+    state scan. Chunk length = cfg.ssm.chunk.
+
+Decode paths carry O(1) state: (B, d) for RG-LRU, (B, H, N, P) for SSD,
+plus (conv_width-1) convolution tails. This is what makes the long_500k
+decode shape feasible for these families.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import rmsnorm
+
+RGLRU_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def causal_conv1d(x, w, tail=None):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C), tail: (B, W-1, C)."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    new_tail = xp[:, -(width - 1) :, :] if width > 1 else tail
+    return out, new_tail
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _rglru_gates(params, u):
+    """Per-channel (diagonal) gates -> (log_a, beta_scaled_input) in fp32."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["wa"] * u32 + params["ba"])
+    i = jax.nn.sigmoid(params["wi_g"] * u32 + params["bi_g"])
+    log_a = RGLRU_C * r * jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * (i * u32)
+
+
+def rglru_forward(params, x, cfg: ArchConfig, state=None, conv_tail=None):
+    """Griffin recurrent block. Returns (out, (h_last, conv_tail))."""
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", h, params["w_gate"]))
+    u = jnp.einsum("bsd,de->bse", h, params["w_x"])
+    u, new_tail = causal_conv1d(u, params["conv"], conv_tail)
+    log_a, b = _rglru_gates(params, u)
+    if state is not None:
+        # fold the carried state into the first step: b_0 += a_0 * h_prev
+        b = b.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * state)
+
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    out = jnp.einsum("bse,ed->bsd", (gate.astype(jnp.float32) * hs).astype(x.dtype),
+                     params["w_out"])
+    return out, (hs[:, -1, :], new_tail)
+
+
+def rglru_decode(params, x, state, conv_tail, cfg: ArchConfig):
+    """Single-step RG-LRU. state: (B, d) fp32; conv_tail: (B, W-1, d)."""
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", h, params["w_gate"]))
+    u = jnp.einsum("bsd,de->bse", h, params["w_x"])
+    u, new_tail = causal_conv1d(u, params["conv"], conv_tail)
+    log_a, b = _rglru_gates(params, u)
+    h_new = jnp.exp(log_a[:, 0]) * state + b[:, 0]
+    out = (gate[:, 0].astype(jnp.float32) * h_new).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", out, params["w_out"])[:, None, :]
+    return out, (h_new, new_tail)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+
+def _ssd_project(params, x, cfg: ArchConfig, conv_tail=None):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    gn = s.n_groups * s.state_dim
+    n_heads = d_in // s.head_dim
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, params["w_in"])
+    z = proj[..., :d_in]
+    conv_in = proj[..., d_in : d_in + d_in + 2 * gn]
+    dt_raw = proj[..., -n_heads:]
+    conv_out, new_tail = causal_conv1d(conv_in, params["conv"], conv_tail)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :d_in]
+    b_ = conv_out[..., d_in : d_in + gn]
+    c_ = conv_out[..., d_in + gn :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    return z, xs, b_, c_, dt, new_tail, n_heads
+
+
+def ssd_forward(params, x, cfg: ArchConfig, state=None, conv_tail=None):
+    """Chunked SSD. Returns (out, (ssm_state, conv_tail)).
+
+    Shapes: x (B,S,d); heads H = expand*d/P; state N; G broadcast groups.
+    """
+    s = cfg.ssm
+    b, seq, _ = x.shape
+    z, xs, b_, c_, dt, new_tail, nh = _ssd_project(params, x, cfg, conv_tail)
+    p, n, g = s.head_dim, s.state_dim, s.n_groups
+    q = min(s.chunk, seq)
+    assert seq % q == 0, (seq, q)
+    nc = seq // q
+
+    xh = xs.reshape(b, nc, q, nh, p)
+    bh = b_.reshape(b, nc, q, g, n)
+    ch = c_.reshape(b, nc, q, g, n)
+    if g == 1:
+        bh, ch = bh[..., 0, :], ch[..., 0, :]  # (B,nc,Q,N) shared across heads
+    dtc = dt.reshape(b, nc, q, nh)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (H,)
+    da = dtc * a[None, None, None, :]                   # (B,nc,Q,H) log-decay
+    cum = jnp.cumsum(da, axis=2)                        # inclusive
+    xdt = xh * dtc[..., None]
+
+    # intra-chunk (quadratic, MXU): scores_ij = C_i . B_j * exp(cum_i-cum_j), i>=j
+    scores = jnp.einsum("bcin,bcjn->bcij", ch, bh)      # (B,nc,Q,Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum(
+        "bcij,bcijh,bcjhp->bcihp", scores, l_mat.astype(scores.dtype),
+        xdt, preferred_element_type=jnp.float32,
+    )
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) B_j (dt_j x_j)^T
+    tail_decay = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,H)
+    s_c = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchnp", bh, tail_decay.astype(bh.dtype), xdt,
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk recurrence over nc (linear scan)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,nc,H)
+
+    def scan_body(carry, inp):
+        s_chunk, dec = inp  # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + s_chunk
+        return new, carry  # emit the *incoming* state for this chunk
+
+    init = (
+        state.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, nh, n, p), jnp.float32)
+    )
+    s_cm = jnp.moveaxis(s_c, 1, 0)          # (nc,B,H,N,P)
+    dec_m = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,H)
+    final_state, incoming = jax.lax.scan(scan_body, init, (s_cm, dec_m))
+    incoming = jnp.moveaxis(incoming, 0, 1)  # (B,nc,H,N,P)
+
+    in_decay = jnp.exp(cum)                  # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcin,bchnp,bcih->bcihp", ch, incoming.astype(ch.dtype),
+        in_decay.astype(ch.dtype), preferred_element_type=jnp.float32,
+    )
+
+    y = (y_intra + y_inter).astype(x.dtype).reshape(b, seq, nh, p)
+    y = y + xh.reshape(b, seq, nh, p) * params["skip_d"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, seq, nh * p)
+    y = rmsnorm(y * jax.nn.silu(z), params["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, (final_state, new_tail)
+
+
+def ssd_decode(params, x, state, conv_tail, cfg: ArchConfig):
+    """Single-step SSD recurrence. state: (B,H,N,P) fp32."""
+    s = cfg.ssm
+    b = x.shape[0]
+    z, xs, b_, c_, dt, new_tail, nh = _ssd_project(params, x, cfg, conv_tail)
+    p, n, g = s.head_dim, s.state_dim, s.n_groups
+    xh = xs.reshape(b, 1, nh, p)[:, 0]
+    bh = b_.reshape(b, 1, g, n)[:, 0, 0] if g == 1 else b_.reshape(b, g, n)
+    ch = c_.reshape(b, 1, g, n)[:, 0, 0] if g == 1 else c_.reshape(b, g, n)
+    dt0 = dt[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt0 * a[None, :])  # (B,H)
+    upd = jnp.einsum("bn,bhp,bh->bhnp", bh.astype(jnp.float32),
+                     xh.astype(jnp.float32), dt0)
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", ch.astype(jnp.float32), new_state)
+    y = y.astype(x.dtype) + xh * params["skip_d"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, nh * p)
+    y = rmsnorm(y * jax.nn.silu(z[:, 0]), params["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["w_out"])[:, None, :]
+    return out, (new_state, new_tail)

@@ -1,0 +1,72 @@
+"""AdamW with sharded fp32 moments over bf16 parameters.
+
+Moments (m, v) inherit each parameter's sharding (FSDP/TP), so optimizer
+memory scales down with the mesh exactly like ZeRO. Updates are computed in
+fp32 and cast back to the parameter dtype (bf16 master-free training with
+fp32 moments — the memory/quality point used by large production runs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+):
+    """One AdamW step. lr may be a scalar or a schedule fn of state['step']."""
+    step = state["step"] + 1
+    lr_t = lr(step) if callable(lr) else lr
+
+    # global-norm clip in fp32
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)) + 1e-12
+    )
+    scale = jnp.minimum(1.0, grad_clip / gnorm)
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        decay = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        return (p.astype(jnp.float32) - lr_t * (u + decay)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr_t,
+    }

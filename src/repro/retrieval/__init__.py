@@ -1,0 +1,2 @@
+from repro.retrieval.service import UniversalVectorService  # noqa: F401
+from repro.retrieval.knn_lm import KnnLM  # noqa: F401

@@ -1,0 +1,62 @@
+"""kNN-LM over a U-HNSW datastore: retrieval-augmented decoding where the
+retrieval metric p is a *per-request* knob.
+
+Standard kNN-LM (Khandelwal et al. 2020) interpolates the LM's next-token
+distribution with a nearest-neighbor distribution over (hidden-state ->
+next-token) pairs:  p(y) = (1-lam) p_LM(y) + lam p_kNN(y), where p_kNN
+weights neighbors by softmax(-d(h, h_i) / T).
+
+The U-HNSW index makes d an *arbitrary Lp* distance chosen at query time —
+the paper's motivating observation is that the most discriminative p varies
+by dataset/task, and with U-HNSW the serving tier can explore p without
+rebuilding the datastore index (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.uhnsw import UHNSW
+
+
+@dataclass
+class KnnLM:
+    index: UHNSW
+    values: np.ndarray          # (n,) int32 next-token id per datastore entry
+    vocab_size: int
+    lam: float = 0.25
+    temperature: float = 1.0
+    k: int = 8
+
+    def build_from_hidden(hidden: np.ndarray, next_tokens: np.ndarray,
+                          vocab_size: int, m: int = 16, seed: int = 0,
+                          **kw) -> "KnnLM":
+        from repro.core.build import build_hnsw_bulk
+
+        g1 = build_hnsw_bulk(hidden, 1.0, m=m, seed=seed)
+        g2 = build_hnsw_bulk(hidden, 2.0, m=m, seed=seed + 1)
+        return KnnLM(UHNSW(g1, g2), next_tokens.astype(np.int32),
+                     vocab_size, **kw)
+
+    build_from_hidden = staticmethod(build_from_hidden)
+
+    def knn_logprobs(self, h: np.ndarray, p: float) -> np.ndarray:
+        """p_kNN over the vocab for query hidden states h (B, d), metric Lp."""
+        ids, dists, _ = self.index.search(jnp.asarray(h), p, self.k)
+        ids, dists = np.asarray(ids), np.asarray(dists, dtype=np.float64)
+        w = np.exp(-dists / self.temperature)
+        w = w / np.maximum(w.sum(axis=1, keepdims=True), 1e-30)
+        out = np.zeros((h.shape[0], self.vocab_size))
+        for b in range(h.shape[0]):
+            np.add.at(out[b], self.values[ids[b]], w[b])
+        return np.log(np.maximum(out, 1e-30))
+
+    def mix(self, lm_logprobs: np.ndarray, h: np.ndarray, p: float) -> np.ndarray:
+        """(1-lam) p_LM + lam p_kNN in probability space; returns logprobs."""
+        knn_lp = self.knn_logprobs(h, p)
+        mixed = (1 - self.lam) * np.exp(lm_logprobs) + self.lam * np.exp(knn_lp)
+        return np.log(np.maximum(mixed, 1e-30))

@@ -1,0 +1,67 @@
+"""Universal vector-search service: the paper's engine as a serving feature.
+
+Wraps a UHNSW index behind a request API where *every request carries its
+own p* (the ANNS-U-Lp contract). Mixed-p request streams are grouped by p
+into sub-batches (the per-p jit cache makes each group a single device
+program), queries shard over the ('pod','data') mesh axes at scale.
+
+This is the deployment surface the paper motivates (§1: per-application /
+per-task optimal p) — e.g. a multi-tenant retrieval tier where each tenant
+tuned its own metric.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.uhnsw import UHNSW, UHNSWParams
+
+
+@dataclass
+class QueryRequest:
+    vector: np.ndarray
+    p: float
+    k: int = 10
+    request_id: int = 0
+
+
+@dataclass
+class UniversalVectorService:
+    index: UHNSW
+    max_batch: int = 256
+    stats: dict = field(default_factory=lambda: {
+        "queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
+    })
+
+    @classmethod
+    def build(cls, data: np.ndarray, params: UHNSWParams | None = None,
+              m: int = 32, bulk: bool = True, seed: int = 0, **kw):
+        from repro.core.build import build_hnsw, build_hnsw_bulk
+
+        builder = build_hnsw_bulk if bulk else build_hnsw
+        g1 = builder(data, 1.0, m=m, seed=seed)
+        g2 = builder(data, 2.0, m=m, seed=seed + 1)
+        return cls(index=UHNSW(g1, g2, params), **kw)
+
+    def serve(self, requests: list[QueryRequest]) -> dict[int, tuple]:
+        """Serve a mixed-p request list. Returns request_id -> (ids, dists)."""
+        # group by (p, k): each group is one batched device call
+        groups: dict[tuple[float, int], list[QueryRequest]] = {}
+        for r in requests:
+            groups.setdefault((float(r.p), int(r.k)), []).append(r)
+        out: dict[int, tuple] = {}
+        for (p, k), reqs in sorted(groups.items()):
+            for start in range(0, len(reqs), self.max_batch):
+                chunk = reqs[start : start + self.max_batch]
+                q = np.stack([r.vector for r in chunk]).astype(np.float32)
+                ids, dists, stats = self.index.search(q, p, k)
+                ids, dists = np.asarray(ids), np.asarray(dists)
+                for i, r in enumerate(chunk):
+                    out[r.request_id] = (ids[i], dists[i])
+                self.stats["queries"] += len(chunk)
+                self.stats["batches"] += 1
+                self.stats["n_b"] += float(np.asarray(stats.n_b).sum())
+                self.stats["n_p"] += float(np.asarray(stats.n_p).sum())
+        return out

@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + decode over jit'd steps.
+
+The engine owns the compiled prefill/decode executables and the KV cache;
+requests are served in fixed-size batches (continuous batching is modeled as
+slot reuse: a finished sequence's slot is refilled at the next prefill).
+Greedy and temperature sampling.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import Runtime
+from repro.models.model import decode_step, init_cache, prefill
+
+
+@dataclass
+class ServeEngine:
+    cfg: ArchConfig
+    rt: Runtime
+    params: dict
+    max_seq: int = 512
+
+    def __post_init__(self):
+        cfg, rt = self.cfg, self.rt
+
+        def _prefill(params, batch):
+            return prefill(params, batch, cfg, rt, s_max=self.max_seq)
+
+        def _decode(params, tokens, cache, pos):
+            return decode_step(params, tokens, cache, pos, cfg, rt)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    def generate(
+        self,
+        prompts: np.ndarray,   # (B, S0) int32 prompt tokens
+        steps: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """Generate `steps` tokens for each prompt (greedy if temperature=0)."""
+        cfg = self.cfg
+        b, s0 = prompts.shape
+        assert s0 + steps <= self.max_seq
+        batch = {"tokens": jnp.asarray(prompts, dtype=jnp.int32)}
+        last_hidden, cache = self._prefill(self.params, batch)
+        # first generated token from the prefill's last hidden state
+        from repro.models.model import _head_matrix
+
+        logits = jnp.einsum(
+            "bsd,dv->bsv", last_hidden, _head_matrix(self.params, cfg)
+        )
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits[:, -1, :], temperature, key)
+        out.append(tok)
+        pos = s0
+        for i in range(steps - 1):
+            logits, cache = self._decode(
+                self.params, tok[:, None], cache, jnp.int32(pos)
+            )
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1, :], temperature, sub)
+            out.append(tok)
+            pos += 1
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def _sample(self, logits, temperature, key):
+        logits = logits[..., : self.cfg.vocab_size].astype(jnp.float32)
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+            jnp.int32
+        )

@@ -1,0 +1,8 @@
+from repro.train.step import (  # noqa: F401
+    TrainConfig,
+    make_train_step,
+)
+from repro.train.compression import (  # noqa: F401
+    compress_decompress_grads,
+    compression_init,
+)

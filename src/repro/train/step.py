@@ -1,0 +1,139 @@
+"""Train step factory: loss -> grads -> (compress) -> AdamW, with optional
+microbatch gradient accumulation (scan) and activation remat.
+
+The returned step function is pjit-ready: all inputs/outputs carry
+NamedShardings derived from the param spec tree, so `.lower().compile()`
+against ShapeDtypeStructs is exactly the multi-pod dry-run contract.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import Runtime
+from repro.models.model import loss_fn
+from repro.optim.adamw import adamw_update, cosine_schedule
+from repro.train.compression import compress_decompress_grads
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    microbatches: int = 1          # gradient accumulation factor
+    grad_compression: bool = False  # int8 + error feedback
+    weights_once: bool = False     # pre-gather FSDP weights once per step
+    #                                (dense bf16 copy resident across the
+    #                                microbatch loop; trades HBM for 3x
+    #                                fewer weight collectives — §Perf)
+    b1: float = 0.9
+    b2: float = 0.95
+
+
+def make_train_step(cfg: ArchConfig, rt: Runtime, tc: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt" {m, v, step}, ["err"]} — all sharded.
+    batch leaves have leading dim global_batch (or
+    (microbatches, global_batch/microbatches) when accumulating).
+    """
+    schedule = cosine_schedule(tc.lr, tc.warmup_steps, tc.total_steps)
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, rt), has_aux=True
+        )(params)
+        return grads, metrics
+
+    def _constrain_mb(mb):
+        """Pin each sliced microbatch to the dp sharding — without this,
+        GSPMD reshards the scan xs so every device processes the *full*
+        per-device batch each iteration (measured: flops x microbatches)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        dp = rt.dp_axes
+        dp = dp if len(dp) > 1 else dp[0]
+        return jax.tree.map(
+            lambda a: jax.lax.with_sharding_constraint(
+                a, NamedSharding(rt.mesh, P(dp, *([None] * (a.ndim - 1))))
+            ),
+            mb,
+        )
+
+    def _pregather(params):
+        """Replicate the FSDP ('embed') dim of the *forward* weight copy so
+        the per-microbatch all-gathers hoist out of the accumulation loop
+        (the stored params + moments stay ZeRO-sharded; grads reshard back
+        through the constraint's transpose)."""
+        from dataclasses import replace as _replace
+
+        from repro.dist.sharding import spec_shardings
+        from repro.models.params import param_specs
+
+        rt2 = _replace(rt, rules={**rt.rules, "embed": None})
+        shardings = spec_shardings(param_specs(cfg), rt2)
+        return jax.tree.map(
+            lambda p, s: jax.lax.with_sharding_constraint(p, s),
+            params, shardings,
+        )
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tc.microbatches > 1 and tc.weights_once:
+            params = _pregather(params)
+        if tc.microbatches > 1:
+            def acc_body(carry, mb):
+                g_acc, _ = carry
+                g, metrics = compute_grads(params, _constrain_mb(mb))
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, metrics), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            # metrics carry must match the model's metric structure exactly
+            # (e.g. MTP archs emit extra entries)
+            mb0 = jax.tree.map(lambda a: a[0], batch)
+            _, m_shape = jax.eval_shape(compute_grads, params, mb0)
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shape)
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), batch)
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+        else:
+            grads, metrics = compute_grads(params, batch)
+
+        if tc.grad_compression:
+            grads, new_err = compress_decompress_grads(grads, state["err"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], schedule,
+            b1=tc.b1, b2=tc.b2,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
+        )
+        new_state = {"params": new_params, "opt": new_opt}
+        if tc.grad_compression:
+            new_state["err"] = new_err
+        metrics = {**metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, rt: Runtime, tc: TrainConfig, key):
+    from repro.models.model import init_params
+    from repro.optim.adamw import adamw_init
+    from repro.train.compression import compression_init
+
+    params = init_params(cfg, key)
+    state = {"params": params, "opt": adamw_init(params)}
+    if tc.grad_compression:
+        state["err"] = compression_init(params)
+    return state

@@ -1,0 +1,37 @@
+"""Shared fixtures: small synthetic datasets + prebuilt indexes.
+
+NOTE: no XLA_FLAGS device-count forcing here — smoke tests and benches must
+see the real single-device CPU backend. Only launch/dryrun.py forces 512
+placeholder devices, and it does so before importing jax.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.build import build_hnsw, build_hnsw_bulk
+from repro.core.datasets import make_dataset
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    """~2k-point SIFT-like dataset: big enough for meaningful recall."""
+    return make_dataset("sift", n=2000, n_queries=24, seed=7)
+
+
+@pytest.fixture(scope="session")
+def graphs_bulk(small_ds):
+    g1 = build_hnsw_bulk(small_ds.data, 1.0, m=12, seed=0)
+    g2 = build_hnsw_bulk(small_ds.data, 2.0, m=12, seed=1)
+    return g1, g2
+
+
+@pytest.fixture(scope="session")
+def graph_incremental(small_ds):
+    # smaller subset: the sequential builder is Python-bound
+    data = small_ds.data[:600]
+    return build_hnsw(data, 2.0, m=8, ef_construction=60, seed=0)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""Per-architecture smoke tests: reduced config, one train step on CPU,
+output shapes + finite loss + finite grads (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.dist.sharding import Runtime
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import loss_fn
+from repro.models.params import count_params, init_params, layer_plan
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def rt():
+    return Runtime(mesh=make_local_mesh())
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_one_train_step(arch_id, rt):
+    cfg = get_arch(arch_id, smoke=True)
+    tc = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+    pipe = SyntheticTokenPipeline(cfg, global_batch=2, seq_len=32, seed=1)
+    with jax.sharding.set_mesh(rt.mesh):
+        state = init_train_state(cfg, rt, tc, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, rt, tc), donate_argnums=(0,))
+        state, metrics = step(state, pipe.batch(0))
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), f"{arch_id}: loss={loss}"
+        assert float(metrics["grad_norm"]) > 0
+        # params updated and still finite
+        leaf = jax.tree.leaves(state["params"])[0]
+        assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_param_counts(arch_id):
+    """The full (published) configs must land near their nameplate sizes."""
+    expected = {
+        "musicgen_large": (1.5e9, 3.5e9),
+        "tinyllama_1_1b": (1.0e9, 1.3e9),
+        "qwen2_5_32b": (30e9, 36e9),
+        "nemotron_4_340b": (330e9, 350e9),
+        "minitron_4b": (3.5e9, 5e9),
+        "recurrentgemma_2b": (2.0e9, 3.6e9),
+        "deepseek_v3_671b": (650e9, 690e9),
+        "llama4_scout_17b_a16e": (100e9, 115e9),
+        "mamba2_1_3b": (1.2e9, 1.6e9),
+        "llava_next_34b": (32e9, 36e9),
+    }
+    cfg = get_arch(arch_id)
+    n = count_params(cfg)
+    lo, hi = expected[arch_id]
+    assert lo <= n <= hi, f"{arch_id}: {n / 1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_arch("deepseek_v3_671b")
+    active = cfg.active_param_count()
+    total = cfg.param_count()
+    # DeepSeek-V3: 37B active of 671B total
+    assert 30e9 < active < 45e9, active / 1e9
+    assert total / active > 14
+
+
+def test_layer_plans():
+    assert layer_plan(get_arch("deepseek_v3_671b")) == [
+        (("mla+ffn",), 3), (("mla+moe",), 58)
+    ]
+    assert layer_plan(get_arch("recurrentgemma_2b")) == [
+        (("rglru+ffn", "rglru+ffn", "local_attn+ffn"), 8), (("rglru+ffn",), 2)
+    ]
+    assert layer_plan(get_arch("mamba2_1_3b")) == [(("ssd",), 48)]
+    assert layer_plan(get_arch("tinyllama_1_1b")) == [(("gqa+ffn",), 22)]
+
+
+def test_sub_quadratic_gating():
+    subq = {a for a in ARCH_IDS if get_arch(a).sub_quadratic}
+    assert subq == {"recurrentgemma_2b", "mamba2_1_3b"}
+
+
+@pytest.mark.parametrize("arch_id", ["musicgen_large", "llava_next_34b"])
+def test_frontend_stub_inputs(arch_id, rt):
+    """Audio/VLM archs consume precomputed frame/patch embeddings."""
+    cfg = get_arch(arch_id, smoke=True)
+    pipe = SyntheticTokenPipeline(cfg, global_batch=2, seq_len=16, seed=0)
+    batch = pipe.batch(0)
+    assert "frames" in batch and batch["frames"].shape == (2, 16, cfg.frontend_dim)
+    with jax.sharding.set_mesh(rt.mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        loss, _ = jax.jit(lambda p, b: loss_fn(p, b, cfg, rt))(params, batch)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,91 @@
+"""HNSW construction invariants (both sequential and bulk builders)."""
+
+from collections import deque
+
+import numpy as np
+import pytest
+
+
+def _components(adj0):
+    n = adj0.shape[0]
+    comp = np.full(n, -1)
+    label = 0
+    for s in range(n):
+        if comp[s] >= 0:
+            continue
+        q = deque([s])
+        comp[s] = label
+        while q:
+            u = q.popleft()
+            for v in adj0[u]:
+                if v >= 0 and comp[v] < 0:
+                    comp[v] = label
+                    q.append(int(v))
+        label += 1
+    return label, comp
+
+
+def _check_invariants(g):
+    n = g.n
+    assert g.entry_point >= 0 and g.levels[g.entry_point] == g.max_level
+    assert len(g.adjacency) == g.max_level + 1
+    for l, (mat, nodes, g2l) in enumerate(
+        zip(g.adjacency, g.level_nodes, g.local_index)
+    ):
+        m_max = g.m0 if l == 0 else g.m
+        assert mat.shape == (len(nodes), m_max)
+        # ids are valid or -1 padding
+        assert mat.max() < n
+        assert mat.min() >= -1
+        # no self-edges
+        for row, u in zip(mat, nodes):
+            real = row[row >= 0]
+            assert u not in real
+            # neighbors at level l must themselves have level >= l
+            assert (g.levels[real] >= l).all()
+            # no duplicate edges
+            assert len(set(real.tolist())) == len(real)
+        # local index is a correct inverse
+        assert (g2l[nodes] == np.arange(len(nodes))).all()
+    # level sizes decay
+    sizes = [len(nodes) for nodes in g.level_nodes]
+    assert sizes[0] == n
+    assert all(a >= b for a, b in zip(sizes, sizes[1:]))
+
+
+def test_bulk_builder_invariants(graphs_bulk):
+    g1, g2 = graphs_bulk
+    _check_invariants(g1)
+    _check_invariants(g2)
+    assert g1.metric_p == 1.0 and g2.metric_p == 2.0
+
+
+def test_incremental_builder_invariants(graph_incremental):
+    _check_invariants(graph_incremental)
+
+
+def test_bulk_level0_connected(graphs_bulk):
+    """The repair pass must leave level 0 reachable from the entry point."""
+    for g in graphs_bulk:
+        ncomp, comp = _components(g.adjacency[0])
+        assert ncomp == 1, f"level-0 graph has {ncomp} components"
+
+
+def test_index_size_accounting(graphs_bulk):
+    g1, _ = graphs_bulk
+    size = g1.index_size_bytes()
+    assert size > 0
+    # excludes the dataset
+    assert size < g1.data.nbytes + 10_000_000
+    raw_adj = sum(a.nbytes for a in g1.adjacency)
+    assert size >= raw_adj
+
+
+def test_builders_deterministic(small_ds):
+    from repro.core.build import build_hnsw_bulk
+
+    a = build_hnsw_bulk(small_ds.data[:500], 2.0, m=8, seed=3)
+    b = build_hnsw_bulk(small_ds.data[:500], 2.0, m=8, seed=3)
+    assert a.entry_point == b.entry_point
+    for x, y in zip(a.adjacency, b.adjacency):
+        np.testing.assert_array_equal(x, y)

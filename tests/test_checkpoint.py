@@ -1,0 +1,111 @@
+"""Checkpoint store: roundtrip, atomicity, async, bf16, elastic restore."""
+
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _tree():
+    return {
+        "params": {
+            "w": jnp.arange(24, dtype=jnp.bfloat16).reshape(4, 6),
+            "b": jnp.ones((3,), jnp.float32) * 0.5,
+        },
+        "opt": {"step": jnp.int32(7), "m": [jnp.zeros((2, 2))]},
+    }
+
+
+def _shardings(mesh):
+    rep = NamedSharding(mesh, P())
+    return {
+        "params": {"w": rep, "b": rep},
+        "opt": {"step": rep, "m": [rep]},
+    }
+
+
+def test_roundtrip(tmp_path):
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = _tree()
+    save_checkpoint(tmp_path, 3, tree)
+    skeleton = jax.tree.map(lambda a: a, tree)
+    restored, step = restore_checkpoint(tmp_path, skeleton, _shardings(mesh))
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, dtype=np.float32), np.asarray(b, dtype=np.float32)
+        )
+
+
+def test_latest_step_and_multiple(tmp_path):
+    t = _tree()
+    assert latest_step(tmp_path) is None
+    save_checkpoint(tmp_path, 1, t)
+    save_checkpoint(tmp_path, 10, t)
+    save_checkpoint(tmp_path, 5, t)
+    assert latest_step(tmp_path) == 10
+
+
+def test_atomic_commit_ignores_partial(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 2, t)
+    # simulate a crash mid-write: a stale .tmp directory
+    (tmp_path / "step_00000009.tmp").mkdir()
+    assert latest_step(tmp_path) == 2
+    mesh = jax.make_mesh((1,), ("data",))
+    _, step = restore_checkpoint(tmp_path, t, _shardings(mesh))
+    assert step == 2
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    ck = AsyncCheckpointer(tmp_path)
+    ck.save(4, t)
+    ck.wait()
+    assert latest_step(tmp_path) == 4
+    mesh = jax.make_mesh((1,), ("data",))
+    restored, _ = restore_checkpoint(tmp_path, t, _shardings(mesh))
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], dtype=np.float32),
+        np.asarray(t["params"]["w"], dtype=np.float32),
+    )
+
+
+def test_async_error_surfaces(tmp_path):
+    # a directory path under a regular *file* cannot be created — even by root
+    blocker = tmp_path / "blocker"
+    blocker.write_text("x")
+    ck = AsyncCheckpointer(blocker / "sub")
+    try:
+        ck.save(0, _tree())
+        with pytest.raises(Exception):
+            ck.wait()
+    except (PermissionError, NotADirectoryError):
+        pass  # raised synchronously on some systems — equally fine
+
+
+def test_bf16_bit_exact(tmp_path):
+    # values that straddle bf16 rounding: must round-trip bit-exactly
+    w = (jnp.arange(64, dtype=jnp.float32) * 0.1234567).astype(jnp.bfloat16)
+    save_checkpoint(tmp_path, 0, {"w": w})
+    mesh = jax.make_mesh((1,), ("data",))
+    restored, _ = restore_checkpoint(
+        tmp_path, {"w": w}, {"w": NamedSharding(mesh, P())}
+    )
+    assert (
+        np.asarray(restored["w"]).view(np.uint16)
+        == np.asarray(w).view(np.uint16)
+    ).all()

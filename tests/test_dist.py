@@ -1,0 +1,115 @@
+"""Sharding rules, divisibility fallbacks, runtime axes, HLO cost model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import Runtime, logical_to_spec
+from repro.launch.hlo_cost import analyze_hlo
+
+
+@pytest.fixture(scope="module")
+def rt():
+    return Runtime(mesh=jax.make_mesh((1, 1), ("data", "model")))
+
+
+def test_runtime_axes(rt):
+    assert rt.dp_axes == ("data",)
+    assert rt.tp_axis == "model"
+    assert rt.dp_size == 1 and rt.tp_size == 1
+
+
+def test_logical_mapping_divisible(rt):
+    spec = logical_to_spec(("embed", "ff"), (64, 128), rt)
+    assert spec == P("data", "model")
+
+
+def test_divisibility_fallback():
+    # AbstractMesh lets us model a multi-device mesh on the 1-CPU container
+    rt = Runtime(mesh=jax.sharding.AbstractMesh((1, 2), ("data", "model")))
+    fallbacks = []
+    spec = logical_to_spec(("heads", "head"), (41, 8), rt, fallbacks)
+    assert spec == P(None, None)  # 41 not divisible by 2 -> replicated
+    assert fallbacks and fallbacks[0][0] == "heads"
+
+
+def test_missing_axis_fallback():
+    rt = Runtime(mesh=jax.sharding.AbstractMesh((2,), ("data",)))  # no 'model'
+    spec = logical_to_spec(("ff",), (64,), rt)
+    assert spec == P(None)
+
+
+def test_production_mesh_rules_16x16():
+    """The real production-mesh rules at 16x16 sizes (abstract devices)."""
+    rt = Runtime(mesh=jax.sharding.AbstractMesh((2, 16, 16),
+                                                ("pod", "data", "model")))
+    assert rt.dp_axes == ("pod", "data")
+    assert rt.dp_size == 32 and rt.tp_size == 16
+    # qwen: 40 heads not divisible by 16 -> replicated; ff 27648 shards
+    assert logical_to_spec(("heads",), (40,), rt) == P(None)
+    assert logical_to_spec(("ff",), (27648,), rt) == P("model")
+    assert logical_to_spec(("embed",), (5120,), rt) == P(("pod", "data"))
+    # full-DP mode spans all axes
+    rt2 = Runtime(mesh=rt.mesh, full_dp=True)
+    assert rt2.dp_size == 512
+    assert logical_to_spec(("ff",), (27648,), rt2) == P(None)
+
+
+def test_pod_axis_detection():
+    import os
+    # only run when enough devices were forced (the dry-run process);
+    # locally validate the single-pod path
+    rt = Runtime(mesh=jax.make_mesh((1, 1), ("data", "model")))
+    assert "pod" not in rt.dp_axes
+
+
+# ---------------------------------------------------------------------------
+# loop-aware HLO cost model
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_cost_counts_scan_trips():
+    def withscan(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    x = jnp.ones((64, 128))
+    ws = jnp.ones((8, 128, 128))
+    compiled = jax.jit(withscan).lower(x, ws).compile()
+    got = analyze_hlo(compiled.as_text())["flops"]
+    exact = 2 * 64 * 128 * 128 * 8
+    assert abs(got - exact) / exact < 0.05
+    # and the raw XLA number is ~8x off (documents why we parse the HLO)
+    xla = compiled.cost_analysis()["flops"]
+    assert got / max(xla, 1) > 6
+
+
+def test_hlo_cost_nested_scan():
+    def nested(x, ws):
+        def outer(x, w):
+            def inner(x, _):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(inner, x, jnp.arange(4))
+            return x, None
+        x, _ = jax.lax.scan(outer, x, ws)
+        return x
+
+    x = jnp.ones((64, 128))
+    ws = jnp.ones((8, 128, 128))
+    compiled = jax.jit(nested).lower(x, ws).compile()
+    got = analyze_hlo(compiled.as_text())["flops"]
+    exact = 2 * 64 * 128 * 128 * 8 * 4
+    assert abs(got - exact) / exact < 0.05
+
+
+def test_hlo_cost_dot_flops_exact():
+    f = lambda a, b: a @ b
+    a = jnp.ones((32, 64))
+    b = jnp.ones((64, 48))
+    compiled = jax.jit(f).lower(a, b).compile()
+    got = analyze_hlo(compiled.as_text())["flops"]
+    assert got == pytest.approx(2 * 32 * 64 * 48, rel=0.01)

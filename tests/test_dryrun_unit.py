@@ -1,0 +1,75 @@
+"""Unit tests for dry-run machinery that don't need 512 devices."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_arch
+from repro.configs.base import cells as cells_fn
+
+
+def test_cells_inventory():
+    """40 assigned cells; long_500k runnable only for sub-quadratic archs."""
+    all_cells = cells_fn(include_skips=True)
+    assert len(all_cells) == 40
+    skips = [(a, s) for a, s, skip in all_cells if skip]
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s in skips)
+    runnable = cells_fn(include_skips=False)
+    assert len(runnable) == 32
+
+
+def test_optimized_settings_table():
+    from repro.launch.dryrun import optimized_settings
+
+    # MoE decode -> weights-stationary
+    s = optimized_settings("deepseek_v3_671b", "decode_32k")
+    assert s.get("moe_decode_gather") is True
+    s = optimized_settings("llama4_scout_17b_a16e", "decode_32k")
+    assert s.get("moe_decode_gather") is True
+    # small GQA-dense train -> full DP
+    assert optimized_settings("tinyllama_1_1b", "train_4k").get("full_dp")
+    assert optimized_settings("minitron_4b", "train_4k").get("full_dp")
+    # excluded by counter-measurements: recurrent mixers, MHA audio, decode
+    assert not optimized_settings("recurrentgemma_2b", "train_4k").get("full_dp")
+    assert not optimized_settings("mamba2_1_3b", "train_4k").get("full_dp")
+    assert not optimized_settings("musicgen_large", "train_4k").get("full_dp")
+    assert not optimized_settings("tinyllama_1_1b", "decode_32k").get("full_dp")
+    # big models: mb16; deepseek: mb4 (measured optimum)
+    assert optimized_settings("nemotron_4_340b", "train_4k")["microbatches"] == 16
+    assert optimized_settings("deepseek_v3_671b", "train_4k")["microbatches"] == 4
+    # non-train shapes get no microbatching
+    assert "microbatches" not in optimized_settings("qwen2_5_32b", "prefill_32k")
+
+
+def test_roofline_model_flops():
+    from benchmarks.roofline import model_flops
+
+    # dense train: 6 N D
+    cfg = get_arch("tinyllama_1_1b")
+    got = model_flops("tinyllama_1_1b", "train_4k")
+    assert got == pytest.approx(6 * cfg.param_count() * 256 * 4096)
+    # MoE uses active params
+    ds = get_arch("deepseek_v3_671b")
+    got = model_flops("deepseek_v3_671b", "train_4k")
+    assert got == pytest.approx(6 * ds.active_param_count() * 256 * 4096)
+    # decode: 2 N per token
+    got = model_flops("qwen2_5_32b", "decode_32k")
+    assert got == pytest.approx(2 * get_arch("qwen2_5_32b").param_count() * 128)
+
+
+def test_collective_shape_parser():
+    from repro.launch.dryrun import _shape_bytes
+
+    assert _shape_bytes("f32[16,4096,2048]{2,1,0}") == 16 * 4096 * 2048 * 4
+    assert _shape_bytes("(bf16[8,4]{1,0}, s32[2])") == 8 * 4 * 2 + 2 * 4
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_hlo_cost_collective_kinds():
+    """Collective classification covers the ops the spec enumerates."""
+    from repro.launch.hlo_cost import COLLECTIVES
+
+    assert set(COLLECTIVES) == {
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute",
+    }

@@ -1,0 +1,64 @@
+"""Batched JAX beam search: recall vs brute force + search invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hnsw import GraphArrays, exact_topk, knn_search
+from repro.core.uhnsw import recall
+
+
+def test_search_recall_bulk(graphs_bulk, small_ds):
+    X = jnp.asarray(small_ds.data)
+    Q = jnp.asarray(small_ds.queries)
+    for g in graphs_bulk:
+        arrays = GraphArrays.from_graph(g)
+        ids, dists, nb, hops = knn_search(arrays, X, Q, ef=300, t=100)
+        true_ids, _ = exact_topk(X, Q, g.metric_p, 100)
+        r = recall(ids, true_ids)
+        assert r > 0.9, f"recall {r} too low for p={g.metric_p}"
+        # the whole point: far fewer distance evals than brute force
+        assert float(nb.mean()) < 0.8 * small_ds.n
+
+
+def test_search_recall_incremental(graph_incremental):
+    g = graph_incremental
+    X = jnp.asarray(g.data)
+    Q = X[:16] + 0.01  # near-duplicate queries
+    arrays = GraphArrays.from_graph(g)
+    ids, dists, nb, hops = knn_search(arrays, X, Q, ef=100, t=10)
+    true_ids, _ = exact_topk(X, Q, g.metric_p, 10)
+    assert recall(ids, true_ids) > 0.9
+
+
+def test_search_returns_sorted_unique(graphs_bulk, small_ds):
+    g1, _ = graphs_bulk
+    X = jnp.asarray(small_ds.data)
+    Q = jnp.asarray(small_ds.queries[:8])
+    ids, dists, nb, hops = knn_search(GraphArrays.from_graph(g1), X, Q, ef=120, t=60)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    for i in range(ids.shape[0]):
+        # ascending distances
+        assert (np.diff(dists[i]) >= -1e-6).all()
+        real = ids[i][ids[i] < small_ds.n]
+        assert len(set(real.tolist())) == len(real)
+
+
+def test_exact_topk_chunking_consistent(small_ds):
+    X = jnp.asarray(small_ds.data)
+    Q = jnp.asarray(small_ds.queries[:4])
+    a, da = exact_topk(X, Q, 1.3, 20, chunk=100)
+    b, db = exact_topk(X, Q, 1.3, 20, chunk=1 << 20)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(da), np.asarray(db), rtol=1e-6)
+
+
+def test_nb_counts_bounded(graphs_bulk, small_ds):
+    """N_b can never exceed n (each point's distance computed at most once
+    per query) and must be at least ef."""
+    g1, _ = graphs_bulk
+    X = jnp.asarray(small_ds.data)
+    Q = jnp.asarray(small_ds.queries)
+    _, _, nb, _ = knn_search(GraphArrays.from_graph(g1), X, Q, ef=100, t=50)
+    nb = np.asarray(nb)
+    assert (nb <= small_ds.n).all()
+    assert (nb >= 100).all()

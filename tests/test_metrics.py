@@ -1,0 +1,105 @@
+"""Unit + property tests for Lp distance semantics (repro.core.metrics)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import metrics
+
+P_GRID = [0.5, 0.6, 0.8, 1.0, 1.2, 1.4, 1.5, 1.7, 2.0]
+
+
+@pytest.mark.parametrize("p", P_GRID)
+def test_lp_matches_numpy_oracle(p, rng):
+    q = rng.standard_normal((5, 33)).astype(np.float32)
+    x = rng.standard_normal((11, 33)).astype(np.float32)
+    got = np.asarray(metrics.pairwise_lp(jnp.asarray(q), jnp.asarray(x), p))
+    want = metrics.numpy_lp(q, x, p)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("p", P_GRID)
+def test_root_free_is_ordering_equivalent(p, rng):
+    q = rng.standard_normal((3, 17)).astype(np.float32)
+    x = rng.standard_normal((40, 17)).astype(np.float32)
+    rooted = np.asarray(metrics.pairwise_lp(jnp.asarray(q), jnp.asarray(x), p, root=True))
+    raw = np.asarray(metrics.pairwise_lp(jnp.asarray(q), jnp.asarray(x), p, root=False))
+    for i in range(q.shape[0]):
+        np.testing.assert_array_equal(np.argsort(rooted[i]), np.argsort(raw[i]))
+
+
+@pytest.mark.parametrize("p", P_GRID)
+def test_rowwise_matches_pairwise(p, rng):
+    q = rng.standard_normal((4, 21)).astype(np.float32)
+    x = rng.standard_normal((9, 21)).astype(np.float32)
+    c = jnp.broadcast_to(jnp.asarray(x)[None], (4, 9, 21))
+    rw = np.asarray(metrics.rowwise_lp(jnp.asarray(q), c, p))
+    pw = np.asarray(metrics.pairwise_lp(jnp.asarray(q), jnp.asarray(x), p))
+    np.testing.assert_allclose(rw, pw, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (metric-space invariants)
+# ---------------------------------------------------------------------------
+
+vecs = st.integers(2, 24).flatmap(
+    lambda d: st.tuples(
+        st.lists(st.floats(-50, 50, width=32), min_size=d, max_size=d),
+        st.lists(st.floats(-50, 50, width=32), min_size=d, max_size=d),
+        st.lists(st.floats(-50, 50, width=32), min_size=d, max_size=d),
+    )
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vecs, st.sampled_from([1.0, 1.3, 1.5, 2.0]))
+def test_triangle_inequality_p_ge_1(xyz, p):
+    x, y, z = (jnp.asarray(v, dtype=jnp.float32) for v in xyz)
+    dxy = float(metrics.lp_distance(x, y, p))
+    dyz = float(metrics.lp_distance(y, z, p))
+    dxz = float(metrics.lp_distance(x, z, p))
+    assert dxz <= dxy + dyz + 1e-3 * (1 + dxy + dyz)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vecs, st.sampled_from([0.5, 0.7, 1.0, 1.5, 2.0]))
+def test_symmetry_and_identity(xyz, p):
+    x, y, _ = (jnp.asarray(v, dtype=jnp.float32) for v in xyz)
+    dxy = float(metrics.lp_distance(x, y, p))
+    dyx = float(metrics.lp_distance(y, x, p))
+    assert dxy == pytest.approx(dyx, rel=1e-5, abs=1e-5)
+    assert float(metrics.lp_distance(x, x, p)) == pytest.approx(0.0, abs=1e-5)
+    assert dxy >= 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(vecs)
+def test_lp_monotone_norm_equivalence(xyz):
+    """||v||_p is non-increasing in p (norm equivalence backbone of Fig. 2)."""
+    x, y, _ = (jnp.asarray(v, dtype=jnp.float32) for v in xyz)
+    ds = [float(metrics.lp_distance(x, y, p)) for p in (0.5, 1.0, 1.5, 2.0)]
+    for a, b in zip(ds, ds[1:]):
+        assert b <= a * (1 + 1e-4) + 1e-4
+
+
+def test_cost_model_asymmetry():
+    """The paper's Fig. 1 shape: general p >> sqrt family >= L1/L2."""
+    d = 128
+    basic = [metrics.lp_distance_cost_model(p, d) for p in (1.0, 2.0)]
+    sqrt_fam = [metrics.lp_distance_cost_model(p, d) for p in (0.5, 1.5)]
+    general = [metrics.lp_distance_cost_model(p, d) for p in (0.7, 1.3, 1.9)]
+    assert max(basic) < min(sqrt_fam)
+    assert max(sqrt_fam) < min(general)
+    # >= "more than an order of magnitude" between L2-MXU and general p
+    assert min(general) / metrics.lp_distance_cost_model(2.0, d) > 10
+
+
+def test_base_metric_selector():
+    assert metrics.base_metric_for(0.5) == 1.0
+    assert metrics.base_metric_for(1.4) == 1.0
+    assert metrics.base_metric_for(1.41) == 2.0
+    assert metrics.base_metric_for(2.0) == 2.0
+    with pytest.raises(ValueError):
+        metrics.base_metric_for(2.5)

@@ -1,0 +1,57 @@
+"""MLSH baseline sanity (the paper's comparison target)."""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import numpy_lp
+from repro.core.mlsh import MLSH, sym_stable
+
+
+@pytest.fixture(scope="module")
+def mlsh(small_ds):
+    return MLSH(small_ds.data, m=24, seed=0)
+
+
+def test_mlsh_recall_and_np(mlsh, small_ds):
+    K = 20
+    for p in (0.5, 0.75, 1.0):
+        ids, dists, nps = mlsh.search_batch(small_ds.queries[:12], p, K)
+        rec = 0.0
+        for i, q in enumerate(small_ds.queries[:12]):
+            d = numpy_lp(q[None], small_ds.data, p, root=False)[0]
+            true = set(np.argsort(d, kind="stable")[:K].tolist())
+            rec += len(true & set(ids[i].tolist())) / K
+        rec /= 12
+        assert rec > 0.85, f"p={p} recall {rec}"
+        assert (nps <= small_ds.n).all()
+        # LSH verifies far more candidates than U-HNSW (the paper's point),
+        # but must at least filter *something*
+        assert nps.mean() < small_ds.n
+
+
+def test_mlsh_rejects_out_of_range_p(mlsh, small_ds):
+    with pytest.raises(ValueError):
+        mlsh.search(small_ds.queries[0], 1.5, 10)
+
+
+def test_mlsh_index_selection(mlsh, small_ds):
+    _, _, s_low = mlsh.search(small_ds.queries[0], 0.5, 5)
+    _, _, s_high = mlsh.search(small_ds.queries[0], 0.9, 5)
+    assert s_low.base_p == 0.5
+    assert s_high.base_p == 1.0
+
+
+def test_sym_stable_tails():
+    """alpha=0.5 stable must be much heavier-tailed than Cauchy (alpha=1)."""
+    rng = np.random.default_rng(0)
+    s05 = np.abs(sym_stable(0.5, 20000, rng))
+    s10 = np.abs(sym_stable(1.0, 20000, rng))
+    q05 = np.quantile(s05, 0.99)
+    q10 = np.quantile(s10, 0.99)
+    assert q05 > 10 * q10
+
+
+def test_idealized_cost_monotone_in_np(mlsh):
+    c1 = mlsh.idealized_query_cost(100, 0.7, 128)
+    c2 = mlsh.idealized_query_cost(1000, 0.7, 128)
+    assert c2 == pytest.approx(10 * c1)

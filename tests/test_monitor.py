@@ -1,0 +1,43 @@
+"""Straggler watchdog + heartbeat policies."""
+
+import time
+
+from repro.train.monitor import HeartbeatMonitor, StepWatchdog
+
+
+def test_watchdog_flags_persistent_straggler():
+    wd = StepWatchdog(threshold=1.5, patience=3)
+    base = {0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}
+    slow = {0: 1.0, 1: 1.0, 2: 1.0, 3: 2.5}
+    assert wd.observe(base) == []
+    assert wd.observe(slow) == []       # patience 1
+    assert wd.observe(slow) == []       # patience 2
+    assert wd.observe(slow) == [3]      # flagged
+
+
+def test_watchdog_ignores_transient_jitter():
+    wd = StepWatchdog(threshold=1.5, patience=3)
+    slow = {0: 1.0, 1: 1.0, 2: 1.0, 3: 2.5}
+    base = {0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}
+    wd.observe(slow)
+    wd.observe(slow)
+    wd.observe(base)  # recovery resets the counter
+    assert wd.observe(slow) == []
+
+
+def test_rebalance_conserves_shards():
+    wd = StepWatchdog()
+    hosts = list(range(8))
+    plan = wd.rebalance_plan(hosts, flagged=[2, 5], shards_per_host=4)
+    assert sum(plan.values()) == 32
+    assert plan[2] < 4 and plan[5] < 4
+    assert all(plan[h] >= 4 for h in hosts if h not in (2, 5))
+
+
+def test_heartbeat(tmp_path):
+    hb = HeartbeatMonitor(str(tmp_path / "hb.json"), timeout_s=100.0)
+    assert not hb.is_stalled()  # no file yet
+    hb.beat(5, {"loss": 1.0})
+    assert hb.last_step() == 5
+    assert not hb.is_stalled()
+    assert hb.is_stalled(now=time.time() + 200.0)

@@ -1,0 +1,73 @@
+"""Retrieval integration: universal vector service + kNN-LM over U-HNSW."""
+
+import numpy as np
+import pytest
+
+from repro.core.uhnsw import UHNSW, UHNSWParams
+from repro.retrieval.knn_lm import KnnLM
+from repro.retrieval.service import QueryRequest, UniversalVectorService
+
+
+@pytest.fixture(scope="module")
+def service(small_ds, graphs_bulk):
+    return UniversalVectorService(
+        index=UHNSW(*graphs_bulk, UHNSWParams(t=150))
+    )
+
+
+def test_mixed_p_request_stream(service, small_ds):
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(24):
+        p = rng.choice([0.5, 0.7, 1.0, 1.3, 2.0])
+        reqs.append(QueryRequest(vector=small_ds.queries[i % 8], p=float(p),
+                                 k=5, request_id=i))
+    out = service.serve(reqs)
+    assert set(out) == set(range(24))
+    for ids, dists in out.values():
+        assert len(ids) == 5
+        assert (np.diff(dists) >= -1e-5).all()
+    # identical vectors with identical p must agree regardless of grouping
+    a = service.serve([QueryRequest(small_ds.queries[0], 0.7, 5, 0)])
+    b = service.serve([QueryRequest(small_ds.queries[0], 0.7, 5, 1),
+                       QueryRequest(small_ds.queries[1], 1.3, 5, 2)])
+    np.testing.assert_array_equal(a[0][0], b[1][0])
+
+
+def test_service_stats_accumulate(service, small_ds):
+    before = dict(service.stats)
+    service.serve([QueryRequest(small_ds.queries[0], 0.8, 5, 0)])
+    assert service.stats["queries"] == before["queries"] + 1
+    assert service.stats["n_p"] > before["n_p"]
+
+
+def test_knn_lm_recalls_memorized_continuations(rng):
+    """Datastore of (hidden, next_token): querying with a stored hidden state
+    must put high probability on the memorized token, for any p."""
+    n, d, v = 1200, 24, 50
+    hidden = rng.standard_normal((n, d)).astype(np.float32) * 2
+    next_tokens = rng.integers(0, v, size=n).astype(np.int32)
+    knn = KnnLM.build_from_hidden(hidden, next_tokens, vocab_size=v, m=8,
+                                  k=4, temperature=10.0)
+    q = hidden[:16] + 0.01 * rng.standard_normal((16, d)).astype(np.float32)
+    for p in (0.6, 1.0, 1.6):
+        lp = knn.knn_logprobs(q, p)
+        pred = lp.argmax(axis=1)
+        acc = (pred == next_tokens[:16]).mean()
+        assert acc > 0.85, f"p={p}: acc {acc}"
+
+
+def test_knn_lm_mixing_lowers_nll(rng):
+    n, d, v = 800, 16, 32
+    hidden = rng.standard_normal((n, d)).astype(np.float32)
+    next_tokens = rng.integers(0, v, size=n).astype(np.int32)
+    knn = KnnLM.build_from_hidden(hidden, next_tokens, vocab_size=v, m=8,
+                                  k=4, lam=0.5, temperature=10.0)
+    q = hidden[:32]
+    gold = next_tokens[:32]
+    # a deliberately uninformative LM distribution
+    lm_logprobs = np.full((32, v), -np.log(v))
+    mixed = knn.mix(lm_logprobs, q, p=0.8)
+    nll_lm = -lm_logprobs[np.arange(32), gold].mean()
+    nll_mixed = -mixed[np.arange(32), gold].mean()
+    assert nll_mixed < nll_lm - 0.5

@@ -1,0 +1,93 @@
+"""Cache-semantics correctness: prefill + decode must reproduce the
+full-sequence forward logits position by position (teacher forcing).
+
+This is the strongest test of the serving path: it exercises KV caches
+(GQA), latent caches (absorbed-MLA), ring buffers (local attention),
+recurrent states (RG-LRU) and SSD states in one invariant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.dist.sharding import Runtime
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import (
+    _head_matrix,
+    decode_step,
+    forward_train,
+    prefill,
+)
+from repro.models.params import init_params
+
+# tolerance is on max |log-prob| difference: the flash path (chunked fp32
+# online softmax over bf16 activations) and the dense decode path accumulate
+# in different orders, so ~5e-2 noise is expected; semantic cache bugs
+# (wrong position, mask, ring indexing) produce O(1)-O(10) differences and
+# near-zero argmax agreement, which the second assertion catches.
+ARCHS = [
+    ("tinyllama_1_1b", 1.5e-1, jnp.bfloat16),       # GQA + rope
+    ("qwen2_5_32b", 1.5e-1, jnp.bfloat16),          # GQA + qkv bias
+    # MLA absorbed-decode is algebraically exact (fp32 err == 0.0, verified)
+    # but its low-rank bottlenecks amplify bf16 noise into O(1) logit shifts
+    # on random-init models — test the *semantics* at fp32
+    ("deepseek_v3_671b", 1e-3, jnp.float32),        # MLA + MoE, absorbed decode
+    ("recurrentgemma_2b", 2e-1, jnp.bfloat16),      # RG-LRU + local ring buffer
+    ("mamba2_1_3b", 2e-1, jnp.bfloat16),            # SSD chunked vs recurrent
+    ("llama4_scout_17b_a16e", 2e-1, jnp.bfloat16),  # MoE decode dispatch
+]
+
+
+@pytest.mark.parametrize("arch_id,tol,dtype", ARCHS)
+def test_prefill_decode_matches_forward(arch_id, tol, dtype):
+    cfg = get_arch(arch_id, smoke=True)
+    rt = Runtime(mesh=make_local_mesh())
+    B, S0, S = 2, 16, 32
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    with jax.sharding.set_mesh(rt.mesh):
+        params = init_params(cfg, jax.random.PRNGKey(1), dtype=dtype)
+        head = _head_matrix(params, cfg)
+        # ground truth: full forward, logits at every position
+        hidden = forward_train(params, {"tokens": tokens}, cfg, rt)
+        full_logits = jnp.einsum("bsd,dv->bsv", hidden, head)
+
+        # serve path: prefill on the first S0 tokens, then decode
+        _, cache = prefill(params, {"tokens": tokens[:, :S0]}, cfg, rt, s_max=S)
+        agree, total = 0, 0
+        for t in range(S0, S):
+            logits, cache = decode_step(
+                params, tokens[:, t : t + 1], cache, jnp.int32(t), cfg, rt
+            )
+            got = np.asarray(logits[:, 0, : cfg.vocab_size], dtype=np.float32)
+            want = np.asarray(full_logits[:, t, : cfg.vocab_size], dtype=np.float32)
+            # compare post-softmax (logit offsets don't matter)
+            g = jax.nn.log_softmax(got, axis=-1)
+            w = jax.nn.log_softmax(want, axis=-1)
+            err = float(jnp.max(jnp.abs(g - w)))
+            assert err < tol, f"{arch_id} step {t}: max log-prob err {err}"
+            agree += int((np.argmax(g, -1) == np.argmax(w, -1)).sum())
+            total += g.shape[0]
+        # random-init models have near-flat logits, so tiny numerical noise
+        # can flip the argmax: 0.85 still catches any semantic cache bug
+        # (those drive agreement to ~chance = 1/vocab)
+        assert agree / total >= 0.85, f"{arch_id}: argmax agreement {agree}/{total}"
+
+
+def test_serve_engine_greedy_deterministic():
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_arch("tinyllama_1_1b", smoke=True)
+    rt = Runtime(mesh=make_local_mesh())
+    with jax.sharding.set_mesh(rt.mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, rt, params, max_seq=64)
+        prompts = np.ones((2, 8), dtype=np.int32)
+        a = eng.generate(prompts, steps=6)
+        b = eng.generate(prompts, steps=6)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (2, 6)
+    assert (a >= 0).all() and (a < cfg.vocab_size).all()
