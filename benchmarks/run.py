@@ -1,13 +1,36 @@
 """Benchmark aggregator: one function per paper table/figure + roofline.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,sharded]
+
+Each benchmark's rows also land in results/BENCH_<name>.json together with
+wall time and the quick flag, so the perf trajectory (query time, recall,
+N_b/N_p, ...) is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
+
+RESULTS = Path(__file__).parent.parent / "results"
+
+
+def _write_bench_result(name: str, rows, seconds: float, quick: bool,
+                        error: str | None = None):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "bench": name,
+        "status": "error" if error else "ok",
+        "quick": quick,
+        "seconds": round(seconds, 1),
+        "rows": rows if isinstance(rows, list) else [],
+    }
+    if error:
+        payload["error"] = error
+    (RESULTS / f"BENCH_{name}.json").write_text(json.dumps(payload, indent=2))
 
 
 def main(argv=None) -> int:
@@ -24,6 +47,7 @@ def main(argv=None) -> int:
         fig3_param_tuning,
         fig4_uhnsw_vs_hnsw,
         roofline,
+        sharded_index,
         table2_uhnsw_vs_mlsh,
     )
 
@@ -33,6 +57,7 @@ def main(argv=None) -> int:
         "fig3": fig3_param_tuning.run,
         "table2": table2_uhnsw_vs_mlsh.run,
         "fig4": fig4_uhnsw_vs_hnsw.run,
+        "sharded": sharded_index.run,
         "roofline": roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
@@ -43,10 +68,13 @@ def main(argv=None) -> int:
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         try:
-            fn(quick=args.quick)
+            rows = fn(quick=args.quick)
+            _write_bench_result(name, rows, time.time() - t0, args.quick)
         except Exception as e:  # keep going; report at the end
             import traceback
             traceback.print_exc()
+            _write_bench_result(name, None, time.time() - t0, args.quick,
+                                error=repr(e))
             failures.append((name, repr(e)))
         print(f"===== {name} done in {time.time() - t0:.0f}s =====", flush=True)
     if failures:

@@ -1,0 +1,92 @@
+"""Sharded vs monolithic U-HNSW: recall parity, Eq. 1 counts, insert path.
+
+Tracks the cost of segmentation (N_b grows ~linearly in S at fixed
+per-segment t — DESIGN.md §3) against what it buys: parallel builds,
+device placement, and streaming inserts. Rows land in
+results/sharded_index.json and BENCH_sharded.json (via benchmarks/run.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import K_DEFAULT, emit, get_dataset, get_uhnsw, ground_truth
+from repro.core.uhnsw import UHNSWParams, recall
+from repro.index import ShardedUHNSW
+
+P_GRID = [0.5, 1.25, 2.0]
+
+
+def _timed_search(index, Q, p, k):
+    ids, dists, stats = index.search(Q, p, k)  # includes compile on first p
+    np.asarray(ids)
+    t0 = time.time()
+    ids, dists, stats = index.search(Q, p, k)
+    np.asarray(ids)
+    dt = time.time() - t0
+    return ids, stats, dt
+
+
+def run(quick: bool = False):
+    name = "sun" if quick else "sift"
+    num_segments = 4 if quick else 8
+    t = 150 if quick else 300
+    ds = get_dataset(name)
+    Q = jnp.asarray(ds.queries)
+    k = K_DEFAULT
+
+    mono = get_uhnsw(name, m=16, t=t)
+    t0 = time.time()
+    sharded = ShardedUHNSW.build(
+        ds.data, num_segments=num_segments, m=16,
+        params=UHNSWParams(t=t), seed=0,
+    )
+    build_s = time.time() - t0
+
+    rows = []
+    for p in P_GRID:
+        true_ids, _ = ground_truth(name, p, k=k)
+        for label, index in (("monolithic", mono), ("sharded", sharded)):
+            ids, stats, dt = _timed_search(index, Q, p, k)
+            rows.append({
+                "bench": "sharded", "dataset": name, "index": label,
+                "segments": getattr(index, "num_segments", 1), "p": p,
+                "recall": round(recall(ids, true_ids), 4),
+                "query_time_s": round(dt, 4),
+                "qps": round(len(ds.queries) / max(dt, 1e-9), 1),
+                "N_b": round(float(jnp.mean(stats.n_b)), 1),
+                "N_p": round(float(jnp.mean(stats.n_p)), 1),
+            })
+
+    # streaming-insert path: add() latency + self-NN consistency
+    rng = np.random.default_rng(0)
+    v = (ds.data.mean(axis=0)
+         + 5.0 * rng.standard_normal(ds.d)).astype(np.float32)
+    t0 = time.time()
+    gid = sharded.add(v)
+    add_s = time.time() - t0
+    ids, _, _ = sharded.search(v[None, :], 1.25, k=1)
+    insert_row = {
+        "bench": "sharded", "dataset": name, "index": "sharded",
+        "segments": sharded.num_segments, "metric": "insert",
+        "add_time_s": round(add_s, 5), "build_time_s": round(build_s, 1),
+        "self_nn_ok": bool(int(ids[0, 0]) == gid),
+    }
+    emit(rows, "sharded_index")
+    worst = min(
+        (r["recall"] - m["recall"])
+        for r in rows if r["index"] == "sharded"
+        for m in rows if m["index"] == "monolithic" and m["p"] == r["p"]
+    )
+    print(f"insert: add={insert_row['add_time_s']}s "
+          f"self_nn_ok={insert_row['self_nn_ok']} | "
+          f"worst sharded-vs-mono recall delta: {worst:+.4f} "
+          f"(acceptance: >= -0.02)")
+    return rows + [insert_row]
+
+
+if __name__ == "__main__":
+    run()

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs.base import get_arch
 from repro.data.pipeline import SyntheticTokenPipeline
-from repro.dist.sharding import Runtime
+from repro.dist.sharding import Runtime, set_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import _head_matrix, forward_train
 from repro.retrieval.knn_lm import KnnLM
@@ -31,7 +31,7 @@ def main():
     tc = TrainConfig(lr=3e-3, warmup_steps=5, total_steps=60)
     pipe = SyntheticTokenPipeline(cfg, global_batch=8, seq_len=64, seed=0)
 
-    with jax.sharding.set_mesh(rt.mesh):
+    with set_mesh(rt.mesh):
         print("training a small LM on the synthetic stream ...")
         state = init_train_state(cfg, rt, tc, jax.random.PRNGKey(0))
         step = jax.jit(make_train_step(cfg, rt, tc), donate_argnums=(0,))

@@ -3,6 +3,7 @@ feature of a multi-pod JAX LM training/serving framework.
 
 Layers:
   repro.core       — the paper's contribution (U-HNSW, HNSW, MLSH baseline)
+  repro.index      — segmented sharded U-HNSW + streaming-insert delta tier
   repro.kernels    — Pallas TPU kernels for Lp distance computation
   repro.models     — LM model zoo (10 assigned architectures)
   repro.dist       — mesh / sharding / collective helpers

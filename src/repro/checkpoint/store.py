@@ -181,7 +181,10 @@ class AsyncCheckpointer:
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
+        # non-daemon: interpreter shutdown (including SystemExit from fault
+        # injection) joins the writer, so an in-flight checkpoint commits
+        # instead of being torn down mid-write and losing the step
+        self._thread = threading.Thread(target=work, daemon=False)
         self._thread.start()
 
     def wait(self):

@@ -80,6 +80,65 @@ class GraphArrays:
             metric_p=g.metric_p,
         )
 
+    def pad_to(self, n_pad: int, n_levels: int,
+               level_sizes: tuple[int, ...],
+               upper_m: int | None = None) -> "GraphArrays":
+        """Re-pad to a uniform shape so segments can stack (repro.index).
+
+        Grows the node capacity to n_pad (sentinel n -> n_pad everywhere),
+        the upper-level count to n_levels and each level-l row count to
+        level_sizes[l]. Missing levels become a single all-sentinel row with
+        every node mapped onto it: one greedy-descent hop sees only invalid
+        neighbors, adds 0 to N_b, and falls through to the next level.
+        """
+        assert n_pad >= self.n and n_levels >= len(self.upper_adj)
+        old_n = self.n
+
+        def repad(a, rows):
+            a = np.asarray(a)
+            a = np.where(a == old_n, n_pad, a).astype(np.int32)
+            out = np.full((rows, a.shape[1]), n_pad, dtype=np.int32)
+            out[: a.shape[0]] = a
+            return jnp.asarray(out)
+
+        m = upper_m or (
+            self.upper_adj[0].shape[1] if self.upper_adj else self.adj0.shape[1]
+        )
+        upper_adj, upper_g2l = [], []
+        for l in range(n_levels):
+            if l < len(self.upper_adj):
+                upper_adj.append(repad(self.upper_adj[l], level_sizes[l]))
+                g2l = np.full(n_pad, -1, dtype=np.int32)
+                g2l[:old_n] = np.asarray(self.upper_g2l[l])
+            else:
+                upper_adj.append(
+                    jnp.full((level_sizes[l], m), n_pad, dtype=jnp.int32)
+                )
+                g2l = np.zeros(n_pad, dtype=np.int32)  # -> harmless row 0
+            upper_g2l.append(jnp.asarray(g2l))
+        return GraphArrays(
+            adj0=repad(self.adj0, n_pad),
+            upper_adj=tuple(upper_adj),
+            upper_g2l=tuple(upper_g2l),
+            entry=self.entry,
+            n=n_pad,
+            metric_p=self.metric_p,
+        )
+
+    @staticmethod
+    def stack(arrays: "list[GraphArrays]") -> "GraphArrays":
+        """Stack same-shaped GraphArrays on a leading segment axis.
+
+        All inputs must already be pad_to'd to identical shapes (and share
+        metric_p); the result vmaps over axis 0 in knn_search.
+        """
+        n = arrays[0].n
+        p = arrays[0].metric_p
+        assert all(a.n == n and a.metric_p == p for a in arrays)
+        leaves = [a.tree_flatten()[0] for a in arrays]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+        return GraphArrays(*stacked, n=n, metric_p=p)
+
 
 def _base_dist(q: jax.Array, x: jax.Array, p: float) -> jax.Array:
     """Ordering-equivalent base-metric distance (root-free power sum)."""
@@ -211,7 +270,11 @@ def knn_search(
 
 
 def exact_topk(X: jax.Array, Q: jax.Array, p: float, k: int, chunk: int = 8192):
-    """Brute-force Lp top-k oracle (used for ground truth and recall)."""
+    """Brute-force Lp top-k oracle (used for ground truth and recall).
+
+    When n < k the trailing slots hold id -1 with inf distance — padding,
+    not real points; `recall()` and downstream consumers must mask ids < 0.
+    """
     from repro.core.metrics import pairwise_lp
 
     n = X.shape[0]

@@ -66,9 +66,19 @@ def verify_candidates(
     """Early-terminated exact-Lp re-ranking (Algorithm 1 lines 7-11).
 
     Returns (ids (B,k), dists (B,k) with root applied, n_p (B,), iters ()).
+
+    Candidate ids outside [0, n) are padding (sentinels from underfilled
+    beams / merges) and are scored as inf so they can never enter R.
     """
     B, t = cand_ids.shape
+    n = X.shape[0]
     n_batches = max((t - k) // kappa, 0)
+
+    def lp_block(ids):
+        """Exact Lp distances for a candidate id block; padding -> inf."""
+        valid = (ids >= 0) & (ids < n)
+        d = rowwise_lp(Q, X[jnp.clip(ids, 0, n - 1)], p, root=False)
+        return jnp.where(valid, d, jnp.inf)
 
     def topk_merge(ids_a, d_a, ids_b, d_b):
         ids = jnp.concatenate([ids_a, ids_b], axis=1)
@@ -78,7 +88,7 @@ def verify_candidates(
 
     # line 7: R <- first K points of C (their Lp distances count toward N_p)
     first = cand_ids[:, :k]
-    r_dist = rowwise_lp(Q, X[first], p, root=False)
+    r_dist = lp_block(first)
     r_dist, r_ids = jax.lax.sort((r_dist, first), num_keys=1)
     n_p0 = jnp.full((B,), k, dtype=jnp.int32)
 
@@ -93,7 +103,7 @@ def verify_candidates(
         i, r_ids, r_dist, done, n_p = s
         start = k + i * kappa
         batch = jax.lax.dynamic_slice(cand_ids, (0, start), (B, kappa))
-        bd = rowwise_lp(Q, X[batch], p, root=False)  # (B, kappa) exact Lp
+        bd = lp_block(batch)  # (B, kappa) exact Lp, padding -> inf
         new_ids, new_dist = topk_merge(r_ids, r_dist, batch, bd)
         # |R_new ∩ R| via id-equality (ids are unique per query)
         inter = (new_ids[:, :, None] == r_ids[:, None, :]).any(-1).sum(-1)
@@ -194,11 +204,19 @@ class UHNSW:
 
 
 def recall(pred_ids, true_ids) -> float:
-    """Top-K recall |S* ∩ S| / K averaged over the query batch (paper §4.1.2)."""
+    """Top-K recall |S* ∩ S| / K averaged over the query batch (paper §4.1.2).
+
+    Negative ids are padding (exact_topk emits -1 when the corpus has fewer
+    than k points; searches emit -1 past the end of real data) and are
+    excluded from both sets; the denominator counts only real ground-truth
+    entries, so recall stays in [0, 1] on degenerate corpora.
+    """
     pred = np.asarray(pred_ids)
     true = np.asarray(true_ids)
-    k = true.shape[1]
-    hits = sum(
-        len(set(map(int, pred[i])) & set(map(int, true[i]))) for i in range(len(pred))
-    )
-    return hits / (len(pred) * k)
+    hits, denom = 0, 0
+    for i in range(len(pred)):
+        t = {int(v) for v in true[i] if v >= 0}
+        s = {int(v) for v in pred[i] if v >= 0}
+        hits += len(s & t)
+        denom += len(t)
+    return hits / max(denom, 1)

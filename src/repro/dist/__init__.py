@@ -1,0 +1,14 @@
+"""Mesh / sharding / collective helpers.
+
+  sharding — Runtime (mesh + parallelism flags), logical-axis -> PartitionSpec
+             mapping with divisibility fallbacks, spec-tree shardings
+  tp       — explicit tensor-parallel matmuls (shard_map) for the FFN path
+"""
+
+from repro.dist.sharding import (  # noqa: F401
+    Runtime,
+    constrain,
+    logical_to_spec,
+    param_struct,
+    spec_shardings,
+)

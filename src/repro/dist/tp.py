@@ -1,0 +1,67 @@
+"""Explicit tensor-parallel FFN matmuls (shard_map) — the rt.explicit_tp path.
+
+GSPMD usually derives these collectives itself; the explicit path exists so
+the dry-run can compare hand-placed collectives against the compiler's
+(EXPERIMENTS.md §Perf). Layout contract matches the param specs:
+
+  wi (d, f)  logical ('embed', 'ff')  -> (dp-sharded, 'model'-sharded)
+  wo (f, d)  logical ('ff', 'embed')  -> ('model'-sharded, dp-sharded)
+
+col_matmul_ffn produces activations column-sharded on f over 'model';
+row_matmul_ffn contracts the f shards and completes with a psum, returning
+the activation replicated over 'model' (batch stays dp-sharded throughout).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _dp_spec(rt):
+    dp = rt.dp_axes
+    if not dp:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def col_matmul_ffn(x: jax.Array, w: jax.Array, rt) -> jax.Array:
+    """x (B, S, d) @ w (d, f) -> (B, S, f) column-sharded on f over 'model'."""
+    if rt.tp_size == 1:
+        return jnp.einsum("bsd,df->bsf", x, w)
+    dp, tp = rt.dp_axes, rt.tp_axis
+    dps = _dp_spec(rt)
+
+    def inner(xl, wl):
+        # un-FSDP the weight's d axis for this layer's matmul
+        wf = jax.lax.all_gather(wl, dp, axis=0, tiled=True) if dp else wl
+        return jnp.einsum("bsd,df->bsf", xl, wf)
+
+    return shard_map(
+        inner, mesh=rt.mesh,
+        in_specs=(P(dps, None, None), P(dps, tp)),
+        out_specs=P(dps, None, tp),
+        check_rep=False,
+    )(x, w)
+
+
+def row_matmul_ffn(x: jax.Array, w: jax.Array, rt) -> jax.Array:
+    """x (B, S, f) f-sharded @ w (f, d) -> (B, S, d), psum over 'model'."""
+    if rt.tp_size == 1:
+        return jnp.einsum("bsf,fd->bsd", x, w)
+    dp, tp = rt.dp_axes, rt.tp_axis
+    dps = _dp_spec(rt)
+
+    def inner(xl, wl):
+        wf = jax.lax.all_gather(wl, dp, axis=1, tiled=True) if dp else wl
+        y = jnp.einsum("bsf,fd->bsd", xl, wf)
+        return jax.lax.psum(y, tp)
+
+    return shard_map(
+        inner, mesh=rt.mesh,
+        in_specs=(P(dps, None, tp), P(tp, dps)),
+        out_specs=P(dps, None, None),
+        check_rep=False,
+    )(x, w)

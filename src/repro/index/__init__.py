@@ -1,0 +1,13 @@
+"""Segmented, sharded, streaming U-HNSW index (DESIGN.md §3).
+
+  segment — partition a dataset into S segments; per-segment G1/G2 graphs
+            pad_to'd to uniform shapes and stacked for vmapped traversal
+  sharded — ShardedUHNSW: vmapped per-segment beam search, one lax.sort
+            merge, a single verify_candidates pass (paper N_p preserved)
+  delta   — mutable delta buffer for online add(): brute-force exact-Lp
+            scan merged into graph results; compaction -> new frozen segment
+"""
+
+from repro.index.delta import DeltaBuffer  # noqa: F401
+from repro.index.segment import SegmentedGraphs, build_segments, partition_dataset  # noqa: F401
+from repro.index.sharded import ShardedUHNSW  # noqa: F401

@@ -1,0 +1,84 @@
+"""Mutable delta tier for streaming inserts (DESIGN.md §3).
+
+Graph indexes are cheap to query but expensive to mutate; the standard
+serving design is therefore frozen segments + a small mutable delta buffer.
+`add()` is O(1) (append); queries brute-force the delta under *exact* Lp via
+the Pallas pairwise kernel (repro.kernels) — exact distances, so delta hits
+need no verification pass and merge directly with the verified graph top-k.
+When the buffer reaches capacity it compacts: the owner (ShardedUHNSW)
+builds a new frozen segment from the buffered vectors and clears the buffer.
+
+Because the delta scan is exact, a freshly-added vector is findable at every
+p immediately — there is no index-lag window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DeltaBuffer:
+    """Append-only vector buffer with exact-Lp search.
+
+    Global ids are assigned by the owner at add() time (`base_id + slot`)
+    and stay stable across compaction — the compacted segment reuses them.
+    """
+
+    def __init__(self, d: int, capacity: int = 1024):
+        assert capacity >= 1
+        self.d = d
+        self.capacity = capacity
+        self._vecs: list[np.ndarray] = []
+        self._ids: list[int] = []
+        self._cache: jax.Array | None = None  # device copy, invalidated on add
+
+    def __len__(self) -> int:
+        return len(self._vecs)
+
+    @property
+    def full(self) -> bool:
+        return len(self._vecs) >= self.capacity
+
+    def add(self, vec: np.ndarray, global_id: int) -> int:
+        v = np.asarray(vec, dtype=np.float32).reshape(-1)
+        assert v.shape == (self.d,), (v.shape, self.d)
+        self._vecs.append(v)
+        self._ids.append(int(global_id))
+        self._cache = None
+        return global_id
+
+    def vectors(self) -> np.ndarray:
+        """(n_delta, d) snapshot (host)."""
+        if not self._vecs:
+            return np.zeros((0, self.d), dtype=np.float32)
+        return np.stack(self._vecs)
+
+    def ids(self) -> np.ndarray:
+        return np.asarray(self._ids, dtype=np.int32)
+
+    def drain(self) -> tuple[np.ndarray, np.ndarray]:
+        """Return (vectors, ids) and empty the buffer (compaction step)."""
+        vecs, ids = self.vectors(), self.ids()
+        self._vecs, self._ids, self._cache = [], [], None
+        return vecs, ids
+
+    def search(self, Q: jax.Array, p: float) -> tuple[jax.Array, jax.Array]:
+        """Exact rooted Lp distances of every buffered vector to each query.
+
+        Returns (ids (B, n_delta) int32 global, dists (B, n_delta) f32).
+        Empty buffer -> (B, 0) arrays, so callers can concatenate blindly.
+        """
+        b = Q.shape[0]
+        if not self._vecs:
+            z = jnp.zeros((b, 0))
+            return z.astype(jnp.int32), z
+        if self._cache is None:
+            self._cache = jnp.asarray(self.vectors())
+        from repro.kernels.ops import pallas_pairwise_lp
+
+        dists = pallas_pairwise_lp(Q, self._cache, p, root=True)
+        ids = jnp.broadcast_to(jnp.asarray(self.ids())[None, :],
+                               (b, len(self._vecs)))
+        return ids, dists

@@ -1,0 +1,260 @@
+"""ShardedUHNSW: segmented U-HNSW with one merged verification pass.
+
+Query path (DESIGN.md §3):
+
+  1. Candidate generation — `jax.vmap` the batched beam search over the
+     stacked (S,) segment axis of the selected base graph (G1 for p <= 1.4,
+     G2 otherwise). One device program traverses all S segments; the segment
+     axis shards over the mesh's data axes (`shard_over`), so segments run
+     on different chips at scale.
+  2. Merge — the S per-segment top-t lists (already ascending) concatenate
+     to (B, S*t) and a single `lax.sort` keeps the global top-t under the
+     base metric. Segments hold disjoint ids, so no dedup is needed.
+  3. Verification — ONE `verify_candidates` pass over the merged list.
+     Running verification after the merge (not per segment) preserves the
+     paper's early-termination N_p savings end-to-end: the convergence test
+     sees the same globally-ordered candidate stream a monolithic index
+     would produce.
+  4. Delta merge — exact rooted-Lp distances for the mutable delta buffer
+     (repro.index.delta) sort-merge into the verified top-k. Exactness means
+     no verification is owed for delta hits.
+
+Streaming inserts: `add()` appends to the delta buffer; at capacity the
+buffer compacts into a new frozen segment (graphs build host-side, stacks
+re-pad) and the cycle repeats. Ids are assigned once and never change.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.hnsw import GraphArrays, knn_search
+from repro.core.metrics import base_metric_for
+from repro.core.uhnsw import SearchStats, UHNSWParams, verify_candidates
+from repro.index.delta import DeltaBuffer
+from repro.index.segment import SegmentedGraphs, build_segment_pair, build_segments
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "t", "max_hops"))
+def segmented_knn_search(
+    arrays: GraphArrays,   # stacked, leading (S,) axis, n = n_pad
+    X: jax.Array,          # (S, n_pad, d)
+    node_ids: jax.Array,   # (S, n_pad) local -> global, -1 pad
+    Q: jax.Array,          # (B, d)
+    ef: int,
+    t: int,
+    max_hops: int = 4096,
+):
+    """Vmapped per-segment base-metric search + one-sort global merge.
+
+    Returns (gids (B, t) int32 global ids (-1 past the end of real data),
+    dists (B, t) base-metric root-free distances, n_b (B,), hops (B,)).
+    """
+    n_pad = arrays.n
+
+    def per_segment(arr, x, ni):
+        ids, dists, nb, hops = knn_search(
+            arr, x, Q, ef=ef, t=t, max_hops=max_hops
+        )
+        valid = ids < n_pad
+        g = jnp.where(valid, ni[jnp.clip(ids, 0, n_pad - 1)], -1)
+        d = jnp.where(valid & (g >= 0), dists, jnp.inf)
+        return g, d, nb, hops
+
+    g, d, nb, hops = jax.vmap(per_segment)(arrays, X, node_ids)
+    b = Q.shape[0]
+    g = jnp.moveaxis(g, 0, 1).reshape(b, -1)  # (B, S*t)
+    d = jnp.moveaxis(d, 0, 1).reshape(b, -1)
+    sd, si = jax.lax.sort((d, g), num_keys=1)
+    return si[:, :t], sd[:, :t], nb.sum(axis=0), hops.sum(axis=0)
+
+
+class ShardedUHNSW:
+    """Segmented U-HNSW index with streaming inserts.
+
+    Drop-in for UHNSW at the serving layer: `search(Q, p, k)` has the same
+    contract (ids, rooted dists, SearchStats). Adds `add(vec)` for online
+    insertion and `shard_over(rt)` for multi-device placement.
+    """
+
+    def __init__(
+        self,
+        segments: SegmentedGraphs,
+        data: np.ndarray,
+        params: UHNSWParams | None = None,
+        delta_capacity: int = 1024,
+    ):
+        self.segments = segments
+        self.params = params or UHNSWParams()
+        # _X_host holds only *frozen* rows (segment members); delta-resident
+        # vectors live in the DeltaBuffer until compaction appends them here
+        self._X_host = np.ascontiguousarray(data, dtype=np.float32)
+        self.X = jnp.asarray(self._X_host)
+        self.delta = DeltaBuffer(d=self._X_host.shape[1],
+                                 capacity=delta_capacity)
+        self._next_id = len(self._X_host)
+        self._rt = None  # set by shard_over; re-applied after compaction
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        data: np.ndarray,
+        num_segments: int = 4,
+        m: int = 16,
+        params: UHNSWParams | None = None,
+        seed: int = 0,
+        bulk: bool | None = None,
+        delta_capacity: int = 1024,
+    ) -> "ShardedUHNSW":
+        segments = build_segments(data, num_segments=num_segments, m=m,
+                                  seed=seed, bulk=bulk)
+        return cls(segments, data, params=params,
+                   delta_capacity=delta_capacity)
+
+    @property
+    def n(self) -> int:
+        """Total searchable points (frozen segments + delta)."""
+        return self._next_id
+
+    @property
+    def num_segments(self) -> int:
+        return self.segments.num_segments
+
+    def index_size_bytes(self, p_range_max: float = 2.0) -> int:
+        if p_range_max <= 1.0:
+            return sum(g.index_size_bytes() for g in self.segments.graphs1)
+        return self.segments.index_size_bytes()
+
+    # -- placement ----------------------------------------------------------
+
+    def shard_over(self, rt) -> "ShardedUHNSW":
+        """Shard the stacked segment axis over the mesh's data axes.
+
+        Picks the first dp axis whose size divides S; replicates (no-op)
+        when none does — single-device tests and uneven meshes stay valid.
+        The Runtime is retained so compaction (which restacks the arrays)
+        re-applies the placement.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        self._rt = rt
+        s = self.num_segments
+        axis = next((a for a in rt.dp_axes
+                     if s % int(rt.mesh.shape[a]) == 0), None)
+        if axis is None:
+            return self
+
+        def place(x):
+            spec = P(axis, *([None] * (x.ndim - 1)))
+            return jax.device_put(x, NamedSharding(rt.mesh, spec))
+
+        seg = self.segments
+        for name in ("arrays1", "arrays2"):
+            arr = getattr(seg, name)
+            children, aux = arr.tree_flatten()
+            children = jax.tree.map(place, children)
+            setattr(seg, name, GraphArrays.tree_unflatten(aux, children))
+        seg.X = place(seg.X)
+        seg.node_ids = place(seg.node_ids)
+        return self
+
+    # -- query --------------------------------------------------------------
+
+    def base_arrays_for(self, p: float) -> tuple[GraphArrays, float]:
+        base = base_metric_for(p, self.params.cutoff)
+        seg = self.segments
+        return (seg.arrays1, 1.0) if base == 1.0 else (seg.arrays2, 2.0)
+
+    def search(self, Q, p: float, k: int):
+        """Batched ANNS-U-Lp over all segments + delta. Q: (B, d)."""
+        prm = self.params
+        Q = jnp.asarray(Q, dtype=jnp.float32)
+        arrays, base_p = self.base_arrays_for(p)
+        n_frozen = sum(g.n for g in self.segments.graphs1)
+        t = min(prm.t, n_frozen)
+        ef = max(prm.ef or 2 * prm.t, t)
+        cand_ids, cand_dists, n_b, hops = segmented_knn_search(
+            arrays, self.segments.X, self.segments.node_ids, Q,
+            ef=ef, t=t, max_hops=prm.max_hops,
+        )
+        if p == base_p:
+            # base-metric query: the merged graph ordering is already exact
+            ids = cand_ids[:, :k]
+            dists = metrics._root(cand_dists[:, :k], p)
+            n_p = jnp.zeros_like(n_b)
+            iters = jnp.int32(0)
+        else:
+            kappa = prm.kappa or max(k // 2, 1)
+            # -1 padding passes through: verify_candidates scores it as inf
+            ids, dists, n_p, iters = verify_candidates(
+                Q, cand_ids, self.X, p, k, kappa, prm.tau
+            )
+        if len(self.delta):
+            d_ids, d_dists = self.delta.search(Q, p)
+            all_ids = jnp.concatenate([ids, d_ids], axis=1)
+            all_d = jnp.concatenate([dists, d_dists], axis=1)
+            sd, si = jax.lax.sort((all_d, all_ids), num_keys=1)
+            ids, dists = si[:, :k], sd[:, :k]
+            n_p = n_p + len(self.delta)  # exact-Lp scans count toward N_p
+        stats = SearchStats(n_b=n_b, n_p=n_p, iterations=iters, base_p=base_p)
+        return ids, dists, stats
+
+    def modeled_query_cost(self, stats: SearchStats, p: float, d: int) -> dict:
+        """T_query = N_b * T_b + N_p * T_p (paper Eq. 1), as in UHNSW."""
+        t_b = metrics.lp_distance_cost_model(stats.base_p, d)
+        t_p = metrics.lp_distance_cost_model(p, d)
+        n_b = float(jnp.mean(stats.n_b))
+        n_p = float(jnp.mean(stats.n_p))
+        return {"N_b": n_b, "N_p": n_p, "T_b": t_b, "T_p": t_p,
+                "total": n_b * t_b + n_p * t_p}
+
+    # -- streaming inserts --------------------------------------------------
+
+    def add(self, vec: np.ndarray) -> int:
+        """Insert one vector online. Returns its (stable) global id.
+
+        O(1): the vector lands in the delta buffer only; the frozen data
+        array grows once per compaction, not once per insert.
+        """
+        v = np.asarray(vec, dtype=np.float32).reshape(-1)
+        # validate before touching any state: a failed add must not burn an
+        # id (ids index data rows — a gap would desync every later insert)
+        d = self._X_host.shape[1]
+        if v.shape[0] != d:
+            raise ValueError(f"vector has dim {v.shape[0]}, index has dim {d}")
+        gid = self._next_id
+        self._next_id += 1
+        self.delta.add(v, gid)
+        if self.delta.full:
+            self.compact()
+        return gid
+
+    def get_vector(self, gid: int) -> np.ndarray:
+        """Look up a vector by global id, whichever tier it lives in."""
+        if 0 <= gid < len(self._X_host):
+            return self._X_host[gid]
+        pos = gid - len(self._X_host)
+        if 0 <= pos < len(self.delta):
+            return self.delta.vectors()[pos]
+        raise IndexError(f"id {gid} not in index (n={self.n})")
+
+    def compact(self):
+        """Freeze the delta buffer into a new segment (graphs + restack)."""
+        if not len(self.delta):
+            return
+        vecs, ids = self.delta.drain()
+        assert int(ids[0]) == len(self._X_host)  # ids stay row-aligned
+        self._X_host = np.concatenate([self._X_host, vecs], axis=0)
+        m = self.segments.graphs1[0].m
+        g1, g2 = build_segment_pair(vecs, m=m, seed=int(ids[0]) + 1)
+        self.segments.append(g1, g2, ids)
+        self.X = jnp.asarray(self._X_host)
+        if self._rt is not None:  # restacking dropped the device placement
+            self.shard_over(self._rt)

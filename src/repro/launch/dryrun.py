@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_arch
-from repro.dist.sharding import Runtime
+from repro.dist.sharding import Runtime, set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import batch_specs, decode_specs, state_specs
 from repro.models.model import decode_step, prefill
@@ -138,7 +138,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
                  seq_shard=seq_shard, moe_decode_gather=moe_decode_gather,
                  full_dp=full_dp)
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             tc = TrainConfig(microbatches=microbatches,
                              weights_once=weights_once)

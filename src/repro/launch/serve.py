@@ -19,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_arch
-from repro.dist.sharding import Runtime
+from repro.dist.sharding import Runtime, set_mesh
 from repro.launch.mesh import make_local_mesh
 
 
@@ -30,7 +30,7 @@ def serve_lm(args) -> int:
     cfg = get_arch(args.arch, smoke=args.smoke)
     mesh = make_local_mesh(args.data, args.model)
     rt = Runtime(mesh=mesh, moe_decode_gather=args.moe_decode_gather)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(args.seed))
         eng = ServeEngine(cfg, rt, params,
                           max_seq=args.prompt_len + args.steps)

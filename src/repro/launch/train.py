@@ -23,7 +23,7 @@ import numpy as np
 from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.configs.base import get_arch
 from repro.data.pipeline import SyntheticTokenPipeline
-from repro.dist.sharding import Runtime, spec_shardings
+from repro.dist.sharding import Runtime, set_mesh, spec_shardings
 from repro.launch.mesh import make_local_mesh
 from repro.models.params import param_specs, _map_specs
 from repro.train.monitor import HeartbeatMonitor
@@ -83,7 +83,7 @@ def main(argv=None):
     step_fn = make_train_step(cfg, rt, tc)
 
     start = 0
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
             skeleton = jax.eval_shape(
                 lambda: init_train_state(cfg, rt, tc, jax.random.PRNGKey(args.seed))

@@ -1,9 +1,12 @@
 """Universal vector-search service: the paper's engine as a serving feature.
 
-Wraps a UHNSW index behind a request API where *every request carries its
-own p* (the ANNS-U-Lp contract). Mixed-p request streams are grouped by p
-into sub-batches (the per-p jit cache makes each group a single device
-program), queries shard over the ('pod','data') mesh axes at scale.
+Wraps an index behind a request API where *every request carries its own p*
+(the ANNS-U-Lp contract). Mixed-p request streams are grouped by p into
+sub-batches (the per-p jit cache makes each group a single device program);
+the index is a ShardedUHNSW by default — its stacked segment axis shards
+over the ('pod','data') mesh axes (`ShardedUHNSW.shard_over`) and its delta
+tier accepts online inserts, so the service supports a full
+read/write mixed-metric workload (DESIGN.md §3).
 
 This is the deployment surface the paper motivates (§1: per-application /
 per-task optimal p) — e.g. a multi-tenant retrieval tier where each tenant
@@ -17,6 +20,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.uhnsw import UHNSW, UHNSWParams
+from repro.index.sharded import ShardedUHNSW
 
 
 @dataclass
@@ -28,22 +32,61 @@ class QueryRequest:
 
 
 @dataclass
+class InsertRequest:
+    vector: np.ndarray
+    request_id: int = 0
+
+
+@dataclass
 class UniversalVectorService:
-    index: UHNSW
+    index: ShardedUHNSW | UHNSW
     max_batch: int = 256
     stats: dict = field(default_factory=lambda: {
-        "queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
+        "queries": 0, "batches": 0, "inserts": 0, "compactions": 0,
+        "n_b": 0.0, "n_p": 0.0,
     })
 
     @classmethod
     def build(cls, data: np.ndarray, params: UHNSWParams | None = None,
-              m: int = 32, bulk: bool = True, seed: int = 0, **kw):
+              m: int = 32, num_segments: int = 4, seed: int = 0,
+              delta_capacity: int = 1024, rt=None, **kw):
+        """Build a segmented sharded index over `data`.
+
+        With rt (a repro.dist Runtime), the segment axis is placed over the
+        mesh's data axes.
+        """
+        index = ShardedUHNSW.build(
+            data, num_segments=num_segments, m=m, params=params, seed=seed,
+            delta_capacity=delta_capacity,
+        )
+        if rt is not None:
+            index.shard_over(rt)
+        return cls(index=index, **kw)
+
+    @classmethod
+    def build_monolithic(cls, data: np.ndarray,
+                         params: UHNSWParams | None = None,
+                         m: int = 32, bulk: bool = True, seed: int = 0, **kw):
+        """Single-segment paper-exact index (no streaming inserts)."""
         from repro.core.build import build_hnsw, build_hnsw_bulk
 
         builder = build_hnsw_bulk if bulk else build_hnsw
         g1 = builder(data, 1.0, m=m, seed=seed)
         g2 = builder(data, 2.0, m=m, seed=seed + 1)
         return cls(index=UHNSW(g1, g2, params), **kw)
+
+    def insert(self, requests: list[InsertRequest]) -> dict[int, int]:
+        """Streaming inserts (ShardedUHNSW only). request_id -> global id."""
+        if not hasattr(self.index, "add"):
+            raise TypeError("index does not support online inserts "
+                            "(build with UniversalVectorService.build)")
+        out: dict[int, int] = {}
+        segs_before = self.index.num_segments
+        for r in requests:
+            out[r.request_id] = self.index.add(r.vector)
+        self.stats["inserts"] += len(requests)
+        self.stats["compactions"] += self.index.num_segments - segs_before
+        return out
 
     def serve(self, requests: list[QueryRequest]) -> dict[int, tuple]:
         """Serve a mixed-p request list. Returns request_id -> (ids, dists)."""

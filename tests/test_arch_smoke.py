@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs.base import ARCH_IDS, get_arch
 from repro.data.pipeline import SyntheticTokenPipeline
-from repro.dist.sharding import Runtime
+from repro.dist.sharding import Runtime, set_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import loss_fn
 from repro.models.params import count_params, init_params, layer_plan
@@ -25,7 +25,7 @@ def test_one_train_step(arch_id, rt):
     cfg = get_arch(arch_id, smoke=True)
     tc = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=4)
     pipe = SyntheticTokenPipeline(cfg, global_batch=2, seq_len=32, seed=1)
-    with jax.sharding.set_mesh(rt.mesh):
+    with set_mesh(rt.mesh):
         state = init_train_state(cfg, rt, tc, jax.random.PRNGKey(0))
         step = jax.jit(make_train_step(cfg, rt, tc), donate_argnums=(0,))
         state, metrics = step(state, pipe.batch(0))
@@ -90,7 +90,7 @@ def test_frontend_stub_inputs(arch_id, rt):
     pipe = SyntheticTokenPipeline(cfg, global_batch=2, seq_len=16, seed=0)
     batch = pipe.batch(0)
     assert "frames" in batch and batch["frames"].shape == (2, 16, cfg.frontend_dim)
-    with jax.sharding.set_mesh(rt.mesh):
+    with set_mesh(rt.mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
         loss, _ = jax.jit(lambda p, b: loss_fn(p, b, cfg, rt))(params, batch)
     assert np.isfinite(float(loss))

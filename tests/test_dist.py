@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import Runtime, logical_to_spec
+from repro.dist.sharding import Runtime, abstract_mesh, logical_to_spec
 from repro.launch.hlo_cost import analyze_hlo
 
 
@@ -28,7 +28,7 @@ def test_logical_mapping_divisible(rt):
 
 def test_divisibility_fallback():
     # AbstractMesh lets us model a multi-device mesh on the 1-CPU container
-    rt = Runtime(mesh=jax.sharding.AbstractMesh((1, 2), ("data", "model")))
+    rt = Runtime(mesh=abstract_mesh((1, 2), ("data", "model")))
     fallbacks = []
     spec = logical_to_spec(("heads", "head"), (41, 8), rt, fallbacks)
     assert spec == P(None, None)  # 41 not divisible by 2 -> replicated
@@ -36,15 +36,14 @@ def test_divisibility_fallback():
 
 
 def test_missing_axis_fallback():
-    rt = Runtime(mesh=jax.sharding.AbstractMesh((2,), ("data",)))  # no 'model'
+    rt = Runtime(mesh=abstract_mesh((2,), ("data",)))  # no 'model'
     spec = logical_to_spec(("ff",), (64,), rt)
     assert spec == P(None)
 
 
 def test_production_mesh_rules_16x16():
     """The real production-mesh rules at 16x16 sizes (abstract devices)."""
-    rt = Runtime(mesh=jax.sharding.AbstractMesh((2, 16, 16),
-                                                ("pod", "data", "model")))
+    rt = Runtime(mesh=abstract_mesh((2, 16, 16), ("pod", "data", "model")))
     assert rt.dp_axes == ("pod", "data")
     assert rt.dp_size == 32 and rt.tp_size == 16
     # qwen: 40 heads not divisible by 16 -> replicated; ff 27648 shards
@@ -84,7 +83,10 @@ def test_hlo_cost_counts_scan_trips():
     exact = 2 * 64 * 128 * 128 * 8
     assert abs(got - exact) / exact < 0.05
     # and the raw XLA number is ~8x off (documents why we parse the HLO)
-    xla = compiled.cost_analysis()["flops"]
+    xla = compiled.cost_analysis()
+    if isinstance(xla, (list, tuple)):  # older jax returns one dict per device
+        xla = xla[0]
+    xla = xla["flops"]
     assert got / max(xla, 1) > 6
 
 

@@ -18,7 +18,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from repro.configs.base import get_arch
-from repro.dist.sharding import Runtime
+from repro.dist.sharding import Runtime, set_mesh
 from repro.data.pipeline import SyntheticTokenPipeline
 from repro.train.step import TrainConfig, init_train_state, make_train_step
 from repro.checkpoint.store import save_checkpoint, restore_checkpoint
@@ -32,7 +32,7 @@ ckpt = tempfile.mkdtemp()
 def run(mesh_shape, start, steps, state=None):
     mesh = jax.make_mesh(mesh_shape, ("data", "model"))
     rt = Runtime(mesh=mesh)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         step = jax.jit(make_train_step(cfg, rt, tc), donate_argnums=(0,))
         if state is None:
             skeleton = jax.eval_shape(
@@ -47,7 +47,7 @@ def run(mesh_shape, start, steps, state=None):
 # phase 1: train on (4,2), checkpoint at step 2
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 rt = Runtime(mesh=mesh)
-with jax.sharding.set_mesh(mesh):
+with set_mesh(mesh):
     state = init_train_state(cfg, rt, tc, jax.random.PRNGKey(0))
 state, ref_pre = run((4, 2), 0, 3, state)
 save_checkpoint(ckpt, 2, state)

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from tests_hypothesis_compat import given, settings, st  # optional dep shim
 
 from repro.kernels.ops import pallas_pairwise_lp, pallas_rowwise_lp
 from repro.kernels.ref import pairwise_lp_ref, rowwise_lp_ref

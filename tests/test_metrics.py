@@ -3,10 +3,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import metrics
+from tests_hypothesis_compat import given, settings, st  # optional dep shim
 
 P_GRID = [0.5, 0.6, 0.8, 1.0, 1.2, 1.4, 1.5, 1.7, 2.0]
 

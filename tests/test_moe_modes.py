@@ -19,7 +19,7 @@ _SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs.base import get_arch
-    from repro.dist.sharding import Runtime
+    from repro.dist.sharding import Runtime, set_mesh
     from repro.models.ffn import moe_forward
     from repro.models.params import init_params
 
@@ -32,7 +32,7 @@ _SCRIPT = textwrap.dedent("""
     moe_params = jax.tree.map(lambda a: a[0], moe_params)  # unstack layer 0
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, cfg.d_model),
                           dtype=jnp.bfloat16)
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         base = jax.jit(lambda p, v: moe_forward(p, v, cfg, rt_base))(moe_params, x)
         fast = jax.jit(lambda p, v: moe_forward(p, v, cfg, rt_gather))(moe_params, x)
     base = np.asarray(base, dtype=np.float32)

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_arch
-from repro.dist.sharding import Runtime
+from repro.dist.sharding import Runtime, set_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import (
     _head_matrix,
@@ -48,7 +48,7 @@ def test_prefill_decode_matches_forward(arch_id, tol, dtype):
     key = jax.random.PRNGKey(0)
     tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
 
-    with jax.sharding.set_mesh(rt.mesh):
+    with set_mesh(rt.mesh):
         params = init_params(cfg, jax.random.PRNGKey(1), dtype=dtype)
         head = _head_matrix(params, cfg)
         # ground truth: full forward, logits at every position
@@ -82,7 +82,7 @@ def test_serve_engine_greedy_deterministic():
 
     cfg = get_arch("tinyllama_1_1b", smoke=True)
     rt = Runtime(mesh=make_local_mesh())
-    with jax.sharding.set_mesh(rt.mesh):
+    with set_mesh(rt.mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
         eng = ServeEngine(cfg, rt, params, max_seq=64)
         prompts = np.ones((2, 8), dtype=np.int32)

@@ -12,7 +12,7 @@ import pytest
 
 from repro.configs.base import get_arch
 from repro.data.pipeline import SyntheticTokenPipeline
-from repro.dist.sharding import Runtime
+from repro.dist.sharding import Runtime, set_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.train.compression import compress_decompress_grads, compression_init
 from repro.train.step import TrainConfig, init_train_state, make_train_step
@@ -26,7 +26,7 @@ def setup():
 
 
 def _run_steps(cfg, rt, tc, n_steps, batch_fn, seed=0):
-    with jax.sharding.set_mesh(rt.mesh):
+    with set_mesh(rt.mesh):
         state = init_train_state(cfg, rt, tc, jax.random.PRNGKey(seed))
         step = jax.jit(make_train_step(cfg, rt, tc), donate_argnums=(0,))
         losses = []

@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim: property tests skip when the dep is missing.
+
+`hypothesis` is a dev-only dependency (requirements-dev.txt) and is absent
+from the runtime container. Importing `given / settings / st` from here lets
+a test module define its strategies and property tests unconditionally: with
+hypothesis installed they run as usual; without it only those tests skip —
+the module's plain pytest tests (the oracle/parametrized bulk) still run.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+except ImportError:
+
+    class _Strategy:
+        """Stand-in whose every method / combinator yields another stand-in,
+        so module-level strategy expressions still evaluate."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: _Strategy()
+
+        def __call__(self, *a, **k):
+            return _Strategy()
+
+    st = _Strategy()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+
+        return deco
