@@ -1,0 +1,69 @@
+"""W-sweep of the multi-expansion beam search (DESIGN.md §2 hot path).
+
+For W ∈ {1, 2, 4, 8} runs the same ANNS-U-Lp workload (fractional p, so the
+full generate+verify pipeline executes) and records recall, mean level-0
+`while_loop` trip count (stats.hops), mean N_b / N_p (paper Eq. 1), and
+wall-clock per query. The tentpole claim this tracks: W=4 cuts the level-0
+trip count >= 2x vs W=1 at equal recall — the serialized pointer-chase
+becomes a quarter as many hops, each doing 4x wider (hardware-friendly)
+tensor work.
+
+  PYTHONPATH=src python -m benchmarks.run --only beam [--quick]
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import K_DEFAULT, get_dataset, get_uhnsw, ground_truth
+from repro.core.uhnsw import recall
+
+P_QUERY = 0.8  # fractional p: G1 candidates + exact-Lp verification
+WIDTHS = (1, 2, 4, 8)
+TIMING_REPS = 3
+
+
+def run(quick: bool = False):
+    name = "trevi" if quick else "sun"
+    widths = (1, 4) if quick else WIDTHS
+    ds = get_dataset(name)
+    idx = get_uhnsw(name)
+    Q = jnp.asarray(ds.queries)
+    true_ids, _ = ground_truth(name, P_QUERY, K_DEFAULT)
+
+    rows = []
+    for w in widths:
+        idx.params = replace(idx.params, expand_width=w)
+        # warm the per-W jit cache, then time steady-state
+        ids, _, stats = idx.search(Q, P_QUERY, K_DEFAULT)
+        jax.block_until_ready(ids)
+        t0 = time.time()
+        for _ in range(TIMING_REPS):
+            ids, _, stats = idx.search(Q, P_QUERY, K_DEFAULT)
+            jax.block_until_ready(ids)
+        ms_per_query = (time.time() - t0) / TIMING_REPS / Q.shape[0] * 1e3
+        rows.append({
+            "dataset": name,
+            "p": P_QUERY,
+            "k": K_DEFAULT,
+            "expand_width": w,
+            "recall": round(recall(np.asarray(ids), true_ids), 4),
+            "mean_hops": round(float(jnp.mean(stats.hops)), 1),
+            "mean_n_b": round(float(jnp.mean(stats.n_b)), 1),
+            "mean_n_p": round(float(jnp.mean(stats.n_p)), 1),
+            "ms_per_query": round(ms_per_query, 3),
+        })
+        print(f"  W={w}: recall={rows[-1]['recall']:.4f} "
+              f"hops={rows[-1]['mean_hops']} N_b={rows[-1]['mean_n_b']} "
+              f"N_p={rows[-1]['mean_n_p']} {ms_per_query:.2f} ms/q",
+              flush=True)
+
+    base = rows[0]
+    for r in rows[1:]:
+        r["hops_speedup_vs_w1"] = round(base["mean_hops"] / r["mean_hops"], 2)
+    return rows

@@ -42,6 +42,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        beam_width,
         fig1_lp_distance_cost,
         fig2_recall_vs_p,
         fig3_param_tuning,
@@ -58,6 +59,7 @@ def main(argv=None) -> int:
         "table2": table2_uhnsw_vs_mlsh.run,
         "fig4": fig4_uhnsw_vs_hnsw.run,
         "sharded": sharded_index.run,
+        "beam": beam_width.run,
         "roofline": roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)

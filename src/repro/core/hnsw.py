@@ -7,11 +7,14 @@ model. We restructure it (DESIGN.md §2) as fixed-width tensor ops inside
   * upper layers: greedy descent, one `while_loop` per layer (layer count is
     static per graph), each hop = gather M neighbors -> one batched base-metric
     distance -> argmin;
-  * layer 0: classic ef-beam-search with the beam kept as a sorted (ef,)
-    array. Each hop expands the best unexpanded beam entry: gather its m0
-    neighbors, test-and-set a per-query visited *bitmask* (uint32 words,
-    carry-safe scatter-add of distinct bits), compute base-metric distances
-    for unseen neighbors, and merge via a single `lax.sort`.
+  * layer 0: ef-beam-search with the beam kept as a sorted (ef,) array and
+    W-way multi-expansion (`expand_width`, DESIGN.md §2 hot path). Each hop
+    expands the W best unexpanded beam entries at once: gather their W*m0
+    neighbors, dedupe across lists (sort + first-occurrence mask), test-and-
+    set a per-query visited *bitmask* (uint32 words, carry-safe scatter-add
+    of distinct bits), compute base-metric distances for unseen neighbors in
+    one fused block, and merge via a single `lax.sort`. W=1 is the classic
+    single-expansion search.
 
 The whole search vmaps over the query batch and jits; query batches shard
 over the ('pod','data') mesh axes at serve time (see repro.retrieval).
@@ -170,10 +173,20 @@ def _greedy_descend(q, X, adj_l, g2l, ep, ep_dist, nb, p, max_hops):
     return s[1], s[2], s[3]
 
 
-def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops):
-    """Level-0 ef-beam search for one query. Returns (ids, dists, nb, hops)."""
+def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops,
+                    width: int = 1):
+    """Level-0 ef-beam search for one query. Returns (ids, dists, nb, hops).
+
+    `width` (W) is the multi-expansion factor (DESIGN.md §2 hot path): each
+    `while_loop` hop expands the W closest unexpanded beam entries at once —
+    one (W*m0,) gather, one batched visited test-and-set, one fused distance
+    block, one merge sort. Trip count drops ~W×; each trip's tensor work is
+    W× wider, which the hardware prefers to W serialized skinny hops. W=1
+    reproduces the classic single-expansion search exactly.
+    """
     n, m0 = X.shape[0], adj0.shape[1]
     words = (n + 31) // 32
+    w = width
 
     ids0 = jnp.full((ef,), n, dtype=jnp.int32).at[0].set(entry)
     dist0 = jnp.full((ef,), jnp.inf, dtype=jnp.float32).at[0].set(entry_dist)
@@ -189,32 +202,51 @@ def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops):
 
     def body(s):
         ids, dist, exp, visited, nb, hops = s
-        # 1. select the closest unexpanded beam entry
+        # 1. select the W closest unexpanded beam entries
         sel_key = jnp.where((exp == 0) & (ids < n), dist, jnp.inf)
-        j = jnp.argmin(sel_key)
-        exp = exp.at[j].set(1)
-        # 2. gather its neighbors, filter via the visited bitmask
-        nbrs = adj0[jnp.clip(ids[j], 0, n - 1)]  # (m0,)
+        if w == 1:
+            js = jnp.argmin(sel_key)[None]        # (1,)
+            sel_ok = jnp.isfinite(sel_key[js])
+        else:
+            neg, js = jax.lax.top_k(-sel_key, w)  # (W,) best = smallest dist
+            sel_ok = jnp.isfinite(neg)            # fewer than W unexpanded?
+        exp = exp.at[js].set(1)
+        # 2. gather all W neighbor lists; unselected slots contribute
+        #    sentinels only
+        srcs = jnp.where(sel_ok, ids[js], n)                  # (W,)
+        nbrs = adj0[jnp.clip(srcs, 0, n - 1)]                 # (W, m0)
+        nbrs = jnp.where(sel_ok[:, None], nbrs, n).reshape(-1)  # (W*m0,)
+        if w > 1:
+            # the W lists can share neighbors; sort + first-occurrence mask
+            # dedupes so the bitmask scatter-add below stays carry-free
+            nbrs = jax.lax.sort(nbrs)
+            first = jnp.concatenate(
+                [jnp.ones((1,), bool), nbrs[1:] != nbrs[:-1]]
+            )
+        else:
+            # a single adjacency row holds distinct ids by construction
+            first = jnp.ones((m0,), bool)
+        # 3. batched visited-bitmask test-and-set
         valid = nbrs < n
         safe = jnp.clip(nbrs, 0, n - 1)
         word = safe >> 5
         bit = jnp.uint32(1) << (safe.astype(jnp.uint32) & 31)
         seen = (visited[word] & bit) != 0
-        new = valid & ~seen
+        new = valid & ~seen & first
         # distinct ids -> distinct (word, bit); duplicates are masked to 0,
         # so the scatter-add below is carry-free.
         visited = visited.at[word].add(bit * new.astype(jnp.uint32))
-        # 3. batched base-metric distances for unseen neighbors only
+        # 4. one fused base-metric distance block for unseen neighbors only
         dv = _base_dist(q, X[safe], p)
         dv = jnp.where(new, dv, jnp.inf)
         nb = nb + new.sum()
-        # 4. merge beam + frontier with a single sort, keep top-ef
+        # 5. merge beam + frontier with a single sort, keep top-ef
         all_ids = jnp.concatenate([ids, nbrs])
         all_dist = jnp.concatenate([dist, dv])
         # frontier entries join unexpanded; anything with inf distance
         # (sentinels, masked duplicates) is flagged expanded so it can never
         # be selected -> guarantees loop progress.
-        all_exp = jnp.concatenate([exp, jnp.zeros((m0,), jnp.int32)])
+        all_exp = jnp.concatenate([exp, jnp.zeros((w * m0,), jnp.int32)])
         all_exp = jnp.where(jnp.isinf(all_dist), 1, all_exp)
         sd, si, se = jax.lax.sort((all_dist, all_ids, all_exp), num_keys=1)
         return (si[:ef], sd[:ef], se[:ef], visited, nb, hops + 1)
@@ -224,7 +256,8 @@ def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops):
     return ids, dist, nb, hops
 
 
-def _search_one(q, X, arrays: GraphArrays, ef: int, max_hops: int):
+def _search_one(q, X, arrays: GraphArrays, ef: int, max_hops: int,
+                expand_width: int = 1):
     p = arrays.metric_p
     n = arrays.n
     ep = arrays.entry
@@ -235,10 +268,11 @@ def _search_one(q, X, arrays: GraphArrays, ef: int, max_hops: int):
         ep, ep_dist, nb = _greedy_descend(
             q, X, adj_l, g2l, ep, ep_dist, nb, p, max_hops
         )
-    return _beam_search_l0(q, X, arrays.adj0, ep, ep_dist, nb, p, ef, max_hops)
+    return _beam_search_l0(q, X, arrays.adj0, ep, ep_dist, nb, p, ef,
+                           max_hops, width=expand_width)
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "t", "max_hops"))
+@functools.partial(jax.jit, static_argnames=("ef", "t", "max_hops", "expand_width"))
 def knn_search(
     arrays: GraphArrays,
     X: jax.Array,
@@ -246,6 +280,7 @@ def knn_search(
     ef: int,
     t: int,
     max_hops: int = 4096,
+    expand_width: int = 1,
 ):
     """Batched t-NN search under the graph's base metric.
 
@@ -255,18 +290,45 @@ def knn_search(
       Q: (B, d) query batch.
       ef: beam width (>= t).
       t: number of candidates to return per query (paper's t).
+      expand_width: W-way multi-expansion factor for the level-0 beam
+        (W best unexpanded entries per hop; W=1 = classic HNSW).
 
     Returns:
       ids   (B, t) int32 candidate ids sorted by base-metric distance;
       dists (B, t) base-metric distances (root-free powers);
       n_b   (B,)   exact count of base-metric Q2D evaluations (Eq. 1 N_b);
-      hops  (B,)   level-0 hop counts.
+      hops  (B,)   level-0 hop counts (while_loop trips — one trip expands
+                   up to `expand_width` beam entries).
     """
     assert ef >= t, (ef, t)
+    assert 1 <= expand_width <= ef, (
+        f"expand_width must be in [1, ef]: got expand_width={expand_width}, "
+        f"ef={ef} (top_k cannot select more entries than the beam holds)"
+    )
     ids, dists, nb, hops = jax.vmap(
-        lambda q: _search_one(q, X, arrays, ef, max_hops)
+        lambda q: _search_one(q, X, arrays, ef, max_hops, expand_width)
     )(Q)
     return ids[:, :t], dists[:, :t], nb, hops
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def _exact_topk_merge_chunk(best_d, best_i, Q, xc, start, p: float):
+    """One brute-force chunk: score + sort-merge into the running top-k.
+
+    Jitted with `start` as a *traced* scalar, so the compile cache is keyed
+    only on the chunk shape: one compilation covers every full chunk and one
+    more covers the ragged tail, instead of re-tracing per chunk.
+    """
+    from repro.core.metrics import pairwise_lp
+
+    k = best_d.shape[1]
+    d = pairwise_lp(Q, xc, p, root=False)
+    ids = jnp.arange(xc.shape[0], dtype=jnp.int32) + start
+    ids = jnp.broadcast_to(ids[None, :], d.shape)
+    all_d = jnp.concatenate([best_d, d], axis=1)
+    all_i = jnp.concatenate([best_i, ids], axis=1)
+    sd, si = jax.lax.sort((all_d, all_i), num_keys=1)
+    return sd[:, :k], si[:, :k]
 
 
 def exact_topk(X: jax.Array, Q: jax.Array, p: float, k: int, chunk: int = 8192):
@@ -275,18 +337,12 @@ def exact_topk(X: jax.Array, Q: jax.Array, p: float, k: int, chunk: int = 8192):
     When n < k the trailing slots hold id -1 with inf distance — padding,
     not real points; `recall()` and downstream consumers must mask ids < 0.
     """
-    from repro.core.metrics import pairwise_lp
-
     n = X.shape[0]
     best_d = jnp.full((Q.shape[0], k), jnp.inf)
     best_i = jnp.full((Q.shape[0], k), -1, dtype=jnp.int32)
     for start in range(0, n, chunk):
         xc = X[start : start + chunk]
-        d = pairwise_lp(Q, xc, p, root=False)
-        ids = jnp.arange(start, start + xc.shape[0], dtype=jnp.int32)
-        ids = jnp.broadcast_to(ids, d.shape)
-        all_d = jnp.concatenate([best_d, d], axis=1)
-        all_i = jnp.concatenate([best_i, ids], axis=1)
-        sd, si = jax.lax.sort((all_d, all_i), num_keys=1)
-        best_d, best_i = sd[:, :k], si[:, :k]
+        best_d, best_i = _exact_topk_merge_chunk(
+            best_d, best_i, Q, xc, jnp.int32(start), p
+        )
     return best_i, best_d

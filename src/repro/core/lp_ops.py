@@ -1,0 +1,49 @@
+"""The cheap-op-sequence table for |diff|^p and s^(1/p) (paper §2.1).
+
+Single source of truth for the per-p-family op sequences, shared by the
+pure-jnp reference metrics (repro.core.metrics) and the Pallas kernel
+bodies (repro.kernels.lp_distance / lp_topk). Both sides used to carry
+private copies; keeping one table here means the hardware cost asymmetry
+(basic ALU for p ∈ {1, 2}, one sqrt for p ∈ {0.5, 1.5}, exp+log for
+general p) cannot drift between reference and kernel.
+
+Everything here is plain jnp elementwise math, so the same functions
+trace correctly inside `pl.pallas_call` kernel bodies and in ordinary
+jitted code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Guard for log(0) in the general-p transcendental path.
+EPS = 1e-30
+
+
+def abs_pow(diff: jax.Array, p: float) -> jax.Array:
+    """|diff|^p elementwise, using the cheapest op sequence for this p."""
+    a = jnp.abs(diff)
+    if p == 1.0:
+        return a
+    if p == 2.0:
+        return diff * diff
+    if p == 0.5:
+        return jnp.sqrt(a)
+    if p == 1.5:
+        return a * jnp.sqrt(a)
+    # General p: exp(p * log|d|), masking the log singularity at 0.
+    safe = jnp.maximum(a, EPS)
+    return jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
+
+
+def lp_root(s: jax.Array, p: float) -> jax.Array:
+    """s^(1/p) elementwise (the outer root of the Lp norm)."""
+    if p == 1.0:
+        return s
+    if p == 2.0:
+        return jnp.sqrt(s)
+    if p == 0.5:
+        return s * s
+    safe = jnp.maximum(s, EPS)
+    return jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / p))

@@ -22,40 +22,18 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.lp_ops import EPS as _EPS  # noqa: F401  (back-compat export)
+from repro.core.lp_ops import abs_pow, lp_root
+
 # p-values whose Lp distance evaluates without transcendentals (fast family).
 BASIC_PS = (1.0, 2.0)
 # p-values that need only a sqrt on top of basic arithmetic (paper §2.1).
 SQRT_PS = (0.5, 1.5)
 
-_EPS = 1e-30
-
-
-def _abs_diff_pow(diff: jax.Array, p: float) -> jax.Array:
-    """|diff|^p elementwise, using the cheapest op sequence for this p."""
-    a = jnp.abs(diff)
-    if p == 1.0:
-        return a
-    if p == 2.0:
-        return diff * diff
-    if p == 0.5:
-        return jnp.sqrt(a)
-    if p == 1.5:
-        return a * jnp.sqrt(a)
-    # General p: exp(p * log|d|), masking the log singularity at 0.
-    safe = jnp.maximum(a, _EPS)
-    return jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
-
-
-def _root(s: jax.Array, p: float) -> jax.Array:
-    """s^(1/p) elementwise (the outer root of the Lp norm)."""
-    if p == 1.0:
-        return s
-    if p == 2.0:
-        return jnp.sqrt(s)
-    if p == 0.5:
-        return s * s
-    safe = jnp.maximum(s, _EPS)
-    return jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / p))
+# The op-sequence table lives in repro.core.lp_ops (shared with the Pallas
+# kernel bodies); these aliases keep the historical private names alive.
+_abs_diff_pow = abs_pow
+_root = lp_root
 
 
 @partial(jax.jit, static_argnames=("p", "root"))

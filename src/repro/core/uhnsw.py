@@ -31,7 +31,7 @@ import numpy as np
 from repro.core import metrics
 from repro.core.build import HNSWGraph, build_hnsw
 from repro.core.hnsw import GraphArrays, knn_search
-from repro.core.metrics import base_metric_for, rowwise_lp
+from repro.core.metrics import base_metric_for
 
 
 @dataclass(frozen=True)
@@ -44,6 +44,8 @@ class UHNSWParams:
     cutoff: float = 1.4   # base-index selection crossover (Fig. 2)
     ef: int | None = None  # beam width for candidate generation; None -> 2t
     max_hops: int = 4096
+    expand_width: int = 1  # W-way multi-expansion in the level-0 beam
+                           # (DESIGN.md §2 hot path); 1 = classic HNSW
 
 
 class SearchStats(NamedTuple):
@@ -51,6 +53,8 @@ class SearchStats(NamedTuple):
     n_p: jax.Array        # (B,) Lp Q2D evaluation counts
     iterations: jax.Array  # () verification loop iterations executed
     base_p: float         # which base metric generated candidates
+    hops: jax.Array | int = 0  # (B,) level-0 while_loop trips (one trip
+                               # expands up to expand_width beam entries)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "k", "kappa", "tau"))
@@ -71,14 +75,20 @@ def verify_candidates(
     beams / merges) and are scored as inf so they can never enter R.
     """
     B, t = cand_ids.shape
-    n = X.shape[0]
     n_batches = max((t - k) // kappa, 0)
 
+    # Imported at trace time (not module scope): repro.core.__init__ pulls in
+    # this module, so a top-level kernels import here would make the
+    # repro.kernels <-> repro.core import order matter.
+    from repro.kernels.ops import lp_gather_distance
+
     def lp_block(ids):
-        """Exact Lp distances for a candidate id block; padding -> inf."""
-        valid = (ids >= 0) & (ids < n)
-        d = rowwise_lp(Q, X[jnp.clip(ids, 0, n - 1)], p, root=False)
-        return jnp.where(valid, d, jnp.inf)
+        """Exact Lp distances for a candidate id block; padding -> inf.
+
+        Routed through the single dispatch entry point (kernels/ops.py):
+        fused gather+distance Pallas kernel on TPU, jnp reference off-TPU.
+        """
+        return lp_gather_distance(Q, ids, X, p, root=False)
 
     def topk_merge(ids_a, d_a, ids_b, d_b):
         ids = jnp.concatenate([ids_a, ids_b], axis=1)
@@ -170,21 +180,26 @@ class UHNSW:
         # bulk-built graphs want a beam wider than t (they trade the
         # sequential builder's deep exploration for vectorized construction)
         ef = prm.ef or 2 * prm.t
+        ef = max(ef, prm.t)
         cand_ids, cand_dists, n_b, hops = knn_search(
-            arrays, self.X, Q, ef=max(ef, prm.t), t=prm.t, max_hops=prm.max_hops
+            arrays, self.X, Q, ef=ef, t=prm.t, max_hops=prm.max_hops,
+            # degenerate tiny beams can't host the full W; clamp, don't fail
+            expand_width=min(prm.expand_width, ef),
         )
         if p == base_p:
             # p equals the base metric: the graph's own ordering is exact
             ids = cand_ids[:, :k]
             dists = metrics._root(cand_dists[:, :k], p)
             stats = SearchStats(n_b=n_b, n_p=jnp.zeros_like(n_b),
-                                iterations=jnp.int32(0), base_p=base_p)
+                                iterations=jnp.int32(0), base_p=base_p,
+                                hops=hops)
             return ids, dists, stats
         kappa = prm.kappa or max(k // 2, 1)
         ids, dists, n_p, iters = verify_candidates(
             Q, cand_ids, self.X, p, k, kappa, prm.tau
         )
-        return ids, dists, SearchStats(n_b=n_b, n_p=n_p, iterations=iters, base_p=base_p)
+        return ids, dists, SearchStats(n_b=n_b, n_p=n_p, iterations=iters,
+                                       base_p=base_p, hops=hops)
 
     # -- paper Eq. 1 cost model ---------------------------------------------
 

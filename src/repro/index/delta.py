@@ -3,8 +3,9 @@
 Graph indexes are cheap to query but expensive to mutate; the standard
 serving design is therefore frozen segments + a small mutable delta buffer.
 `add()` is O(1) (append); queries brute-force the delta under *exact* Lp via
-the Pallas pairwise kernel (repro.kernels) — exact distances, so delta hits
-need no verification pass and merge directly with the verified graph top-k.
+the Lp dispatch entry point (repro.kernels.ops.lp_gather_distance) — exact
+distances, so delta hits need no verification pass and merge directly with
+the verified graph top-k.
 When the buffer reaches capacity it compacts: the owner (ShardedUHNSW)
 builds a new frozen segment from the buffered vectors and clears the buffer.
 
@@ -69,6 +70,12 @@ class DeltaBuffer:
 
         Returns (ids (B, n_delta) int32 global, dists (B, n_delta) f32).
         Empty buffer -> (B, 0) arrays, so callers can concatenate blindly.
+
+        Scoring routes through the exact-Lp dispatch entry point
+        (kernels/ops.lp_gather_distance) like every other query-path Lp
+        eval — in its 1-D shared-ids form, which the dispatcher runs as one
+        pairwise block over the once-gathered buffer (no per-query
+        re-gather; p=2 keeps its MXU matmul).
         """
         b = Q.shape[0]
         if not self._vecs:
@@ -76,9 +83,10 @@ class DeltaBuffer:
             return z.astype(jnp.int32), z
         if self._cache is None:
             self._cache = jnp.asarray(self.vectors())
-        from repro.kernels.ops import pallas_pairwise_lp
+        from repro.kernels.ops import lp_gather_distance
 
-        dists = pallas_pairwise_lp(Q, self._cache, p, root=True)
+        rows = jnp.arange(len(self._vecs), dtype=jnp.int32)
+        dists = lp_gather_distance(Q, rows, self._cache, p, root=True)
         ids = jnp.broadcast_to(jnp.asarray(self.ids())[None, :],
                                (b, len(self._vecs)))
         return ids, dists

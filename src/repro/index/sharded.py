@@ -40,7 +40,9 @@ from repro.index.delta import DeltaBuffer
 from repro.index.segment import SegmentedGraphs, build_segment_pair, build_segments
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "t", "max_hops"))
+@functools.partial(
+    jax.jit, static_argnames=("ef", "t", "max_hops", "expand_width")
+)
 def segmented_knn_search(
     arrays: GraphArrays,   # stacked, leading (S,) axis, n = n_pad
     X: jax.Array,          # (S, n_pad, d)
@@ -49,6 +51,7 @@ def segmented_knn_search(
     ef: int,
     t: int,
     max_hops: int = 4096,
+    expand_width: int = 1,
 ):
     """Vmapped per-segment base-metric search + one-sort global merge.
 
@@ -59,7 +62,8 @@ def segmented_knn_search(
 
     def per_segment(arr, x, ni):
         ids, dists, nb, hops = knn_search(
-            arr, x, Q, ef=ef, t=t, max_hops=max_hops
+            arr, x, Q, ef=ef, t=t, max_hops=max_hops,
+            expand_width=expand_width,
         )
         valid = ids < n_pad
         g = jnp.where(valid, ni[jnp.clip(ids, 0, n_pad - 1)], -1)
@@ -183,6 +187,8 @@ class ShardedUHNSW:
         cand_ids, cand_dists, n_b, hops = segmented_knn_search(
             arrays, self.segments.X, self.segments.node_ids, Q,
             ef=ef, t=t, max_hops=prm.max_hops,
+            # degenerate tiny beams can't host the full W; clamp, don't fail
+            expand_width=min(prm.expand_width, ef),
         )
         if p == base_p:
             # base-metric query: the merged graph ordering is already exact
@@ -203,7 +209,8 @@ class ShardedUHNSW:
             sd, si = jax.lax.sort((all_d, all_ids), num_keys=1)
             ids, dists = si[:, :k], sd[:, :k]
             n_p = n_p + len(self.delta)  # exact-Lp scans count toward N_p
-        stats = SearchStats(n_b=n_b, n_p=n_p, iterations=iters, base_p=base_p)
+        stats = SearchStats(n_b=n_b, n_p=n_p, iterations=iters, base_p=base_p,
+                            hops=hops)
         return ids, dists, stats
 
     def modeled_query_cost(self, stats: SearchStats, p: float, d: int) -> dict:

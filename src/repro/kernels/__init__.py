@@ -6,9 +6,17 @@ Fig. 1). On TPU the same hot-spot maps to VMEM-tiled Pallas kernels:
   lp_distance.py — pairwise (B,d)x(N,d)->(B,N) and rowwise (B,d)x(B,C,d)->(B,C)
                    distance kernels with per-p-family inner loops
                    (L2 rides the MXU; L1/L0.5/L1.5 ride the VPU fast path;
-                   general p pays exp/log transcendentals).
-  ops.py         — jit'd dispatching wrappers with VMEM-aware tile selection.
+                   general p pays exp/log transcendentals), plus the fused
+                   gather+distance kernel ids (B,C) + X (n,d) -> (B,C) used
+                   by the verification hot path.
+  ops.py         — jit'd dispatching wrappers with VMEM-aware tile selection;
+                   `lp_gather_distance` is the single backend-aware entry
+                   point for exact-Lp candidate scoring in query code.
   ref.py         — pure-jnp oracles (re-exported from repro.core.metrics).
 """
 
-from repro.kernels.ops import pallas_pairwise_lp, pallas_rowwise_lp  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    lp_gather_distance,
+    pallas_pairwise_lp,
+    pallas_rowwise_lp,
+)

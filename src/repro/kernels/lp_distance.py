@@ -28,34 +28,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-_EPS = 1e-30
-
-
-def _abs_pow(diff, p: float):
-    """|diff|^p with the cheapest op sequence for this p (mirrors metrics)."""
-    a = jnp.abs(diff)
-    if p == 1.0:
-        return a
-    if p == 2.0:
-        return diff * diff
-    if p == 0.5:
-        return jnp.sqrt(a)
-    if p == 1.5:
-        return a * jnp.sqrt(a)
-    safe = jnp.maximum(a, _EPS)
-    return jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
-
-
-def _root(s, p: float):
-    if p == 1.0:
-        return s
-    if p == 2.0:
-        return jnp.sqrt(s)
-    if p == 0.5:
-        return s * s
-    safe = jnp.maximum(s, _EPS)
-    return jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / p))
+# The per-p op-sequence table is shared with the jnp reference metrics
+# (repro.core.lp_ops) so kernel and oracle cannot drift.
+from repro.core.lp_ops import abs_pow as _abs_pow
+from repro.core.lp_ops import lp_root as _root
 
 
 # ---------------------------------------------------------------------------
@@ -190,3 +168,102 @@ def rowwise_lp_kernel_call(
         out_shape=jax.ShapeDtypeStruct((b, cc), out_dtype),
         interpret=interpret,
     )(q, c)
+
+
+# ---------------------------------------------------------------------------
+# fused gather + distance kernel: ids (B, C) + X (n, d) -> dists (B, C)
+#
+# The verification hot path (core/uhnsw.verify_candidates) scores per-query
+# candidate id blocks against the frozen dataset. The un-fused route is
+# X[ids] -> (B, C, d) in HBM, then the rowwise kernel — i.e. every gathered
+# row makes an HBM round trip before it is read once. Here the gather happens
+# *inside* the kernel: X stays HBM-resident (memory_space=ANY), and each
+# (TB, TC) output tile DMAs its TC candidate rows one-by-one into a (TC, d)
+# VMEM scratch, then runs one vectorized distance block over the scratch
+# (MXU dot for p=2, VPU elementwise otherwise). The (B, C, d) intermediate
+# never exists.
+#
+# Ids outside [0, n) are padding sentinels (-1 from merges, n from beams):
+# they gather a clamped dummy row and score +inf, so callers can pass padded
+# id blocks straight through.
+# ---------------------------------------------------------------------------
+
+
+def _gather_lp_kernel(ids_ref, q_ref, x_hbm, o_ref, gx_ref, sem,
+                      *, p: float, root: bool, n: int, block_c: int):
+    """One (TB, TC) output tile.
+
+    Per query row: TC row DMAs (HBM -> VMEM scratch), then one vectorized
+    (TC, d) distance block. DMAs issue sequentially (start/wait per row);
+    a double-buffered variant would overlap row j+1's copy with row j's
+    compute, but the VMEM scratch already bounds the win to DMA latency.
+    """
+    tb = q_ref.shape[0]
+
+    def per_query(i, _):
+        ids_row = ids_ref[i, :]  # (TC,)
+
+        def gather(j, _):
+            safe = jnp.clip(ids_row[j], 0, n - 1)
+            cp = pltpu.make_async_copy(
+                x_hbm.at[pl.ds(safe, 1), :], gx_ref.at[pl.ds(j, 1), :], sem
+            )
+            cp.start()
+            cp.wait()
+            return 0
+
+        jax.lax.fori_loop(0, block_c, gather, 0)
+        qi = q_ref[i, :].astype(jnp.float32)
+        ct = gx_ref[...].astype(jnp.float32)  # (TC, d)
+        if p == 2.0:
+            s = jnp.sum(qi * qi) + jnp.sum(ct * ct, axis=-1) - 2.0 * jnp.dot(
+                ct, qi, preferred_element_type=jnp.float32
+            )
+            s = jnp.maximum(s, 0.0)
+        else:
+            s = jnp.sum(_abs_pow(ct - qi[None, :], p), axis=-1)
+        val = _root(s, p) if root else s
+        ok = (ids_row >= 0) & (ids_row < n)
+        o_ref[i, :] = jnp.where(ok, val, jnp.inf).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, tb, per_query, 0)
+
+
+def gather_lp_kernel_call(
+    ids: jax.Array,  # (B, C) int32 candidate ids; out-of-range = padding
+    q: jax.Array,    # (B, d)
+    x: jax.Array,    # (n, d) HBM-resident dataset
+    p: float,
+    *,
+    root: bool = False,
+    block_b: int = 8,
+    block_c: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Raw pallas_call for pre-padded inputs (B % block_b == C % block_c == 0)."""
+    b, d = q.shape
+    b2, cc = ids.shape
+    n = x.shape[0]
+    assert b == b2 and b % block_b == 0 and cc % block_c == 0, \
+        (b, b2, cc, block_b, block_c)
+
+    return pl.pallas_call(
+        functools.partial(
+            _gather_lp_kernel, p=p, root=root, n=n, block_c=block_c
+        ),
+        grid=(b // block_b, cc // block_c),
+        in_specs=[
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # X stays in HBM
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, cc), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_c, d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(ids, q, x)

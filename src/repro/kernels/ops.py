@@ -5,7 +5,13 @@ Responsibilities:
   * padding arbitrary (B, N, C) up to tile multiples and slicing the result;
   * interpret-mode fallback on non-TPU backends (this container is CPU-only,
     so tests/benches run the kernel bodies in interpret mode; on a real TPU
-    the same code lowers to Mosaic).
+    the same code lowers to Mosaic);
+  * `lp_gather_distance` — the single entry point for exact-Lp candidate
+    scoring in the query path (verify_candidates, delta scans). On TPU it
+    runs the fused gather+distance kernel (rows gathered tile-by-tile in
+    VMEM, no (B, C, d) HBM intermediate); off-TPU it falls back to the
+    plain jnp reference, which XLA:CPU handles better than an interpreted
+    per-row DMA loop.
 """
 
 from __future__ import annotations
@@ -15,6 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.lp_ops import lp_root
+from repro.core.metrics import rowwise_lp
 from repro.kernels import lp_distance as _k
 
 # VMEM budget we allow a single kernel instance to claim (bytes). v5e has
@@ -123,3 +131,91 @@ def pallas_rowwise_lp(
         qp, cpad, p, root=root, block_b=tb, block_c=tc, interpret=interpret
     )
     return out[:b, :cc]
+
+
+def _pick_tiles_gather(b: int, c: int, d: int) -> tuple[int, int]:
+    """Choose (TB, TC) for the gather kernel.
+
+    VMEM working set ~ 4*(TB*d + TB*TC + TC*d + TB*TC) bytes: the q tile,
+    the ids tile, the (TC, d) gathered-row scratch, and the out tile — X
+    itself stays in HBM, so d no longer multiplies TC*TB. TB stays a
+    multiple of the 8-wide sublane (like the other pickers) so the tile
+    refs lower cleanly on TPU.
+    """
+    tb = min(8, _round_up(b, 8))
+    # tc is a power-of-two multiple of _LANE (128/256/512) so the halving
+    # below can never leave the lane-aligned grid (e.g. 384 -> 192 would)
+    tc = _LANE
+    while tc < min(512, c):
+        tc *= 2
+    while tc > _LANE and 4 * (tb * d + tc * d + 2 * tb * tc) > _VMEM_BUDGET:
+        tc //= 2
+    return max(tb, 8), max(tc, _LANE)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "root", "interpret", "block_b", "block_c")
+)
+def lp_gather_distance(
+    q: jax.Array,    # (B, d) queries
+    ids: jax.Array,  # (B, C) int32 candidate ids; anything outside [0, n) is
+                     # padding (-1 from merges, n from beam sentinels)
+    x: jax.Array,    # (n, d) dataset
+    p: float,
+    root: bool = False,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+) -> jax.Array:
+    """Exact-Lp distances for per-query candidate id blocks -> (B, C).
+
+    THE dispatch entry point for all exact-Lp scoring in the query path
+    (DESIGN.md §2 "hot path"). Padding ids score +inf so they can never
+    enter a result set. `interpret`:
+
+      * None (default) — backend-aware: fused Pallas kernel on TPU, jnp
+        reference (gather + rowwise powers) elsewhere;
+      * True  — force the Pallas kernel in interpret mode (kernel-parity
+        tests on CPU);
+      * False — force the compiled Pallas kernel.
+
+    ids may also be 1-D (C,): "every query scores the same candidate
+    rows" (the delta-scan shape). That routes to the pairwise kernel on a
+    once-gathered (C, d) block — no per-query re-gather, and p=2 keeps
+    its MXU matmul — instead of broadcasting the id row B times.
+    """
+    n = x.shape[0]
+    if ids.ndim == 1:
+        valid = (ids >= 0) & (ids < n)
+        xs = x[jnp.clip(ids, 0, n - 1)]  # gathered once, shared by all rows
+        d = pallas_pairwise_lp(q, xs, p, root=False, interpret=interpret)
+        d = jnp.where(valid[None, :], d, jnp.inf)
+        return lp_root(d, p) if root else d
+    if interpret is None and not _on_tpu():
+        valid = (ids >= 0) & (ids < n)
+        d = rowwise_lp(q, x[jnp.clip(ids, 0, n - 1)], p, root=False)
+        d = jnp.where(valid, d, jnp.inf)
+        return lp_root(d, p) if root else d
+    if interpret is None:
+        interpret = False
+    b, d = q.shape
+    _, cc = ids.shape
+    tb, tc = _pick_tiles_gather(b, cc, d)
+    if block_b is not None:
+        tb = block_b
+    if block_c is not None:
+        tc = block_c
+    bp, cp = _round_up(b, tb), _round_up(cc, tc)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    # pad ids with -1 (sentinel) so padded slots score inf, not garbage
+    ip = jnp.pad(
+        ids.astype(jnp.int32),
+        ((0, bp - b), (0, cp - cc)),
+        constant_values=-1,
+    )
+    # apply the root *outside* the kernel on the (B, C) result: for root=True
+    # callers this keeps the kernel body identical across root modes.
+    out = _k.gather_lp_kernel_call(
+        ip, qp, x, p, root=False, block_b=tb, block_c=tc, interpret=interpret
+    )[:b, :cc]
+    return lp_root(out, p) if root else out

@@ -15,12 +15,20 @@ tuned its own metric.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.core.uhnsw import UHNSW, UHNSWParams
 from repro.index.sharded import ShardedUHNSW
+
+
+def _with_expand_width(params: UHNSWParams | None,
+                       expand_width: int | None) -> UHNSWParams | None:
+    """Apply an explicit expand_width override to the query params."""
+    if expand_width is None:
+        return params
+    return replace(params or UHNSWParams(), expand_width=expand_width)
 
 
 @dataclass
@@ -49,14 +57,17 @@ class UniversalVectorService:
     @classmethod
     def build(cls, data: np.ndarray, params: UHNSWParams | None = None,
               m: int = 32, num_segments: int = 4, seed: int = 0,
-              delta_capacity: int = 1024, rt=None, **kw):
+              delta_capacity: int = 1024, rt=None,
+              expand_width: int | None = None, **kw):
         """Build a segmented sharded index over `data`.
 
         With rt (a repro.dist Runtime), the segment axis is placed over the
-        mesh's data axes.
+        mesh's data axes. expand_width (if given) overrides the params'
+        W-way multi-expansion factor for the level-0 beam.
         """
         index = ShardedUHNSW.build(
-            data, num_segments=num_segments, m=m, params=params, seed=seed,
+            data, num_segments=num_segments, m=m,
+            params=_with_expand_width(params, expand_width), seed=seed,
             delta_capacity=delta_capacity,
         )
         if rt is not None:
@@ -66,13 +77,15 @@ class UniversalVectorService:
     @classmethod
     def build_monolithic(cls, data: np.ndarray,
                          params: UHNSWParams | None = None,
-                         m: int = 32, bulk: bool = True, seed: int = 0, **kw):
+                         m: int = 32, bulk: bool = True, seed: int = 0,
+                         expand_width: int | None = None, **kw):
         """Single-segment paper-exact index (no streaming inserts)."""
         from repro.core.build import build_hnsw, build_hnsw_bulk
 
         builder = build_hnsw_bulk if bulk else build_hnsw
         g1 = builder(data, 1.0, m=m, seed=seed)
         g2 = builder(data, 2.0, m=m, seed=seed + 1)
+        params = _with_expand_width(params, expand_width)
         return cls(index=UHNSW(g1, g2, params), **kw)
 
     def insert(self, requests: list[InsertRequest]) -> dict[int, int]:

@@ -7,7 +7,11 @@ import pytest
 
 from tests_hypothesis_compat import given, settings, st  # optional dep shim
 
-from repro.kernels.ops import pallas_pairwise_lp, pallas_rowwise_lp
+from repro.kernels.ops import (
+    lp_gather_distance,
+    pallas_pairwise_lp,
+    pallas_rowwise_lp,
+)
 from repro.kernels.ref import pairwise_lp_ref, rowwise_lp_ref
 
 P_GRID = [0.5, 0.8, 1.0, 1.3, 1.5, 2.0]
@@ -97,3 +101,95 @@ def test_zero_distance_diagonal():
     for p in (0.7, 1.3):
         d = pallas_pairwise_lp(x, x, p)
         np.testing.assert_allclose(np.asarray(jnp.diag(d)), 0.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused gather+distance kernel (the verification hot path)
+# ---------------------------------------------------------------------------
+
+P_GATHER = [0.5, 0.8, 1.25, 2.0]
+
+
+def _gather_case(seed, b, c, n, d, sentinels=True):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32) * 3)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) * 3)
+    ids = rng.integers(0, n, size=(b, c)).astype(np.int32)
+    if sentinels:
+        # the padding vocabulary of the query path: -1 (merge pad),
+        # n (beam sentinel), and a stray overflow value
+        ids[0, 0] = -1
+        ids[min(1, b - 1), c // 2] = n
+        ids[:, c - 1] = n + 7
+    return q, jnp.asarray(ids), x, ids
+
+
+@pytest.mark.parametrize("p", P_GATHER)
+@pytest.mark.parametrize("root", [False, True])
+def test_gather_kernel_matches_rowwise_ref(p, root):
+    """Fused kernel == gather-then-rowwise_lp, with padding ids -> inf."""
+    q, ids, x, ids_np = _gather_case(11, b=6, c=37, n=200, d=48)
+    n = x.shape[0]
+    got = np.asarray(lp_gather_distance(q, ids, x, p, root=root,
+                                        interpret=True))
+    valid = (ids_np >= 0) & (ids_np < n)
+    want = np.asarray(rowwise_lp_ref(q, x[np.clip(ids_np, 0, n - 1)], p,
+                                     root=root))
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.isinf(got), ~valid)
+    err = np.max(np.abs(got[valid] - want[valid]) /
+                 (np.abs(want[valid]) + 1e-5))
+    assert err < 3e-5, (p, root, err)
+
+
+@pytest.mark.parametrize("p", P_GATHER)
+def test_gather_dispatch_paths_agree(p):
+    """Backend-aware fallback (jnp reference) == forced interpret kernel."""
+    q, ids, x, _ = _gather_case(7, b=5, c=130, n=90, d=33)
+    auto = np.asarray(lp_gather_distance(q, ids, x, p))  # CPU -> reference
+    kern = np.asarray(lp_gather_distance(q, ids, x, p, interpret=True))
+    np.testing.assert_array_equal(np.isinf(auto), np.isinf(kern))
+    finite = np.isfinite(auto)
+    np.testing.assert_allclose(auto[finite], kern[finite], rtol=5e-5)
+
+
+def test_gather_all_padding_row():
+    """A fully-padded id row (underfilled beam) scores inf everywhere."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(50, 16)).astype(np.float32))
+    ids = jnp.concatenate([
+        jnp.full((1, 12), -1, jnp.int32),
+        jnp.full((1, 12), 50, jnp.int32),
+    ])
+    for interpret in (None, True):
+        out = np.asarray(lp_gather_distance(q, ids, x, 1.25,
+                                            interpret=interpret))
+        assert np.isinf(out).all()
+
+
+@pytest.mark.parametrize("p", [0.8, 2.0])
+def test_gather_shared_ids_matches_broadcast(p):
+    """1-D ids (the delta-scan shape) == the same ids broadcast per query."""
+    rng = np.random.default_rng(17)
+    b, c, n, d = 6, 23, 60, 32
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ids1d = rng.integers(-1, n + 1, size=(c,)).astype(np.int32)
+    shared = np.asarray(lp_gather_distance(q, jnp.asarray(ids1d), x, p,
+                                           root=True))
+    bcast = np.asarray(lp_gather_distance(
+        q, jnp.broadcast_to(jnp.asarray(ids1d)[None, :], (b, c)), x, p,
+        root=True))
+    np.testing.assert_array_equal(np.isinf(shared), np.isinf(bcast))
+    finite = np.isfinite(shared)
+    np.testing.assert_allclose(shared[finite], bcast[finite], rtol=5e-5)
+
+
+def test_gather_explicit_tile_override():
+    q, ids, x, _ = _gather_case(9, b=8, c=256, n=120, d=24, sentinels=False)
+    a = lp_gather_distance(q, ids, x, 0.8, interpret=True,
+                           block_b=2, block_c=128)
+    b = lp_gather_distance(q, ids, x, 0.8, interpret=True,
+                           block_b=8, block_c=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
