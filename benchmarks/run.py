@@ -48,6 +48,7 @@ def main(argv=None) -> int:
         fig3_param_tuning,
         fig4_uhnsw_vs_hnsw,
         roofline,
+        serving,
         sharded_index,
         table2_uhnsw_vs_mlsh,
     )
@@ -61,6 +62,7 @@ def main(argv=None) -> int:
         "sharded": sharded_index.run,
         "beam": beam_width.run,
         "roofline": roofline.run,
+        "serving": serving.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     failures = []

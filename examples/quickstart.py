@@ -1,14 +1,22 @@
 """Quickstart: build a U-HNSW index and answer ANNS-U-Lp queries.
 
-    PYTHONPATH=src python examples/quickstart.py [--n 20000] [--dataset sift]
+    python examples/quickstart.py [--n 4000] [--dataset sift]
 
-Builds the two base graphs (G1/L1, G2/L2), then answers the same query
-batch under five different Lp metrics — one index, universal p — and
-reports recall vs brute force plus the paper's Eq. 1 cost split.
+Builds the two base graphs (G1/L1, G2/L2), answers the same query batch
+under six different Lp metrics — one index, universal p — and reports
+recall vs brute force plus the paper's Eq. 1 cost split. Then serves the
+whole mixed-p batch in ONE device call via the per-query-p vector form
+(DESIGN.md §6) and checks it returns identical results.
+
+Runs on CPU in well under a minute at the default size; exits 0.
 """
 
 import argparse
+import sys
 import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax.numpy as jnp
 import numpy as np
@@ -17,13 +25,15 @@ from repro.core.datasets import make_dataset
 from repro.core.hnsw import exact_topk
 from repro.core.uhnsw import UHNSW, UHNSWParams, recall
 
+P_DEMO = [0.5, 0.8, 1.0, 1.3, 1.7, 2.0]
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="sift")
-    ap.add_argument("--n", type=int, default=20_000)
-    ap.add_argument("--queries", type=int, default=50)
-    ap.add_argument("--k", type=int, default=50)
+    ap.add_argument("--n", type=int, default=4_000)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--m", type=int, default=16)
     args = ap.parse_args()
 
@@ -36,24 +46,40 @@ def main():
 
     g1 = build_hnsw_bulk(ds.data, 1.0, m=args.m, seed=0)
     g2 = build_hnsw_bulk(ds.data, 2.0, m=args.m, seed=1)
-    index = UHNSW(g1, g2, UHNSWParams(t=300))
+    index = UHNSW(g1, g2, UHNSWParams(t=150))
     print(f"  built in {time.time() - t0:.0f}s; index "
           f"{index.index_size_bytes() / 1e6:.1f} MB (excl. data)")
 
     X, Q = jnp.asarray(ds.data), jnp.asarray(ds.queries)
     print(f"\n{'p':>5} {'recall':>7} {'N_b':>6} {'N_p':>6} "
           f"{'modeled cost':>13} {'wall ms/q':>10}")
-    for p in [0.5, 0.8, 1.0, 1.3, 1.7, 2.0]:
+    per_p = {}
+    for p in P_DEMO:
         t0 = time.time()
         ids, dists, stats = index.search(Q, p, args.k)
         wall = (time.time() - t0) / args.queries * 1e3
         true_ids, _ = exact_topk(X, Q, p, args.k)
         r = recall(ids, true_ids)
+        per_p[p] = np.asarray(ids)
         c = index.modeled_query_cost(stats, p, ds.d)
         print(f"{p:>5} {r:>7.3f} {c['N_b']:>6.0f} {c['N_p']:>6.0f} "
               f"{c['total']:>13.0f} {wall:>10.2f}")
     print("\nsame index, every p — no per-p graphs (the paper's point).")
 
+    # the serving form: every query carries its OWN p, one batched call
+    # (DESIGN.md §6). Row i of the batch uses metric p_vec[i].
+    rng = np.random.default_rng(0)
+    tenant = rng.integers(len(P_DEMO), size=args.queries)
+    p_vec = np.array([P_DEMO[j] for j in tenant], np.float32)
+    mids, _, _ = index.search(Q, p_vec, args.k)
+    ok = all(
+        np.array_equal(np.asarray(mids)[i], per_p[P_DEMO[tenant[i]]][i])
+        for i in range(args.queries)
+    )
+    print(f"mixed-p batch (one call, {len(set(p_vec.tolist()))} distinct "
+          f"p values) matches per-p results: {ok}")
+    return 0 if ok else 1
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -7,9 +7,21 @@ private copies; keeping one table here means the hardware cost asymmetry
 (basic ALU for p ∈ {1, 2}, one sqrt for p ∈ {0.5, 1.5}, exp+log for
 general p) cannot drift between reference and kernel.
 
+Scalar-vs-vector p contract (DESIGN.md §6): `p` may be
+
+  * a Python float — compile-time specialization, only that p's op
+    sequence is emitted (the classic per-p path); or
+  * a jax scalar / array broadcastable against the data — one traced
+    program serves any mix of p values. The vector path evaluates every
+    family's op sequence elementwise and `jnp.where`-selects per element,
+    so the value produced for a given p is *bit-identical* to the scalar
+    specialization of that p (a select returns the chosen operand's bits
+    unchanged). That bit-parity is what lets the mixed-p serving engine
+    promise "one batched call == per-p grouped calls" exactly.
+
 Everything here is plain jnp elementwise math, so the same functions
-trace correctly inside `pl.pallas_call` kernel bodies and in ordinary
-jitted code.
+trace correctly inside `pl.pallas_call` kernel bodies (where vector p
+shows up as a traced per-row scalar) and in ordinary jitted code.
 """
 
 from __future__ import annotations
@@ -21,29 +33,94 @@ import jax.numpy as jnp
 EPS = 1e-30
 
 
-def abs_pow(diff: jax.Array, p: float) -> jax.Array:
-    """|diff|^p elementwise, using the cheapest op sequence for this p."""
+def is_static_p(p) -> bool:
+    """True when p is a concrete host scalar (per-p static specialization).
+
+    Accepts Python ints/floats and 0-d numpy scalars/arrays — anything a
+    caller can hand over as "one p for the whole call". Dispatchers must
+    coerce with float(p) before using it as a static jit argument (numpy
+    0-d arrays are unhashable). jax arrays — including concrete 0-d ones —
+    take the traced vector-p path.
+    """
+    if isinstance(p, bool):
+        return False
+    if isinstance(p, (int, float)):
+        return True
+    import numpy as np
+
+    return isinstance(p, (np.generic, np.ndarray)) and np.ndim(p) == 0
+
+
+def abs_pow(diff: jax.Array, p) -> jax.Array:
+    """|diff|^p elementwise, using the cheapest op sequence for this p.
+
+    p: Python float (static specialization) or an array broadcastable to
+    `diff` (per-element selection; see module docstring for the contract).
+    """
     a = jnp.abs(diff)
-    if p == 1.0:
-        return a
-    if p == 2.0:
-        return diff * diff
-    if p == 0.5:
-        return jnp.sqrt(a)
-    if p == 1.5:
-        return a * jnp.sqrt(a)
-    # General p: exp(p * log|d|), masking the log singularity at 0.
+    if is_static_p(p):
+        if p == 1.0:
+            return a
+        if p == 2.0:
+            return diff * diff
+        if p == 0.5:
+            return jnp.sqrt(a)
+        if p == 1.5:
+            return a * jnp.sqrt(a)
+        # General p: exp(p * log|d|), masking the log singularity at 0.
+        safe = jnp.maximum(a, EPS)
+        return jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
+    # Traced p: evaluate every family, select per element. Each branch is
+    # the *same expression* the static path emits for that p, so selected
+    # values are bit-identical to the per-p specialization.
     safe = jnp.maximum(a, EPS)
-    return jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
+    out = jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
+    out = jnp.where(p == 1.0, a, out)
+    out = jnp.where(p == 2.0, diff * diff, out)
+    out = jnp.where(p == 0.5, jnp.sqrt(a), out)
+    out = jnp.where(p == 1.5, a * jnp.sqrt(a), out)
+    return out
 
 
-def lp_root(s: jax.Array, p: float) -> jax.Array:
-    """s^(1/p) elementwise (the outer root of the Lp norm)."""
-    if p == 1.0:
-        return s
-    if p == 2.0:
-        return jnp.sqrt(s)
-    if p == 0.5:
-        return s * s
+def _lp_root_impl(s: jax.Array, p, static_fold: bool) -> jax.Array:
+    if is_static_p(p):
+        if p == 1.0:
+            return s
+        if p == 2.0:
+            return jnp.sqrt(s)
+        if p == 0.5:
+            return s * s
+        safe = jnp.maximum(s, EPS)
+        if static_fold:
+            return jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / p))
+        # Force the divisor to a *runtime* operand: XLA strength-reduces
+        # division by a literal constant into multiplication by its
+        # reciprocal, which rounds differently from the true division a
+        # traced-p program performs. The barrier makes the static-p and
+        # vector-p programs emit the identical divide, which is what the
+        # mixed-p serving engine's bit-parity guarantee rests on.
+        pr = jax.lax.optimization_barrier(jnp.asarray(p, jnp.float32))
+        return jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / pr))
     safe = jnp.maximum(s, EPS)
-    return jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / p))
+    out = jnp.where(s == 0, 0.0, jnp.exp(jnp.log(safe) / p))
+    out = jnp.where(p == 1.0, s, out)
+    out = jnp.where(p == 2.0, jnp.sqrt(s), out)
+    out = jnp.where(p == 0.5, s * s, out)
+    return out
+
+
+def lp_root(s: jax.Array, p) -> jax.Array:
+    """s^(1/p) elementwise (the outer root of the Lp norm).
+
+    Same scalar-vs-vector p contract as `abs_pow`; for static general p the
+    divisor is barriered so the emitted division rounds identically to the
+    vector-p program's (see `_lp_root_impl`).
+    """
+    return _lp_root_impl(s, p, static_fold=False)
+
+
+def lp_root_folded(s: jax.Array, p) -> jax.Array:
+    """`lp_root` without the division barrier — for Pallas kernel *bodies*,
+    where `lax.optimization_barrier` is not guaranteed to lower through
+    Mosaic and the historical constant-folded codegen should be kept."""
+    return _lp_root_impl(s, p, static_fold=True)

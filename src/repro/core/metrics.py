@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lp_ops import EPS as _EPS  # noqa: F401  (back-compat export)
-from repro.core.lp_ops import abs_pow, lp_root
+from repro.core.lp_ops import abs_pow, is_static_p, lp_root
 
 # p-values whose Lp distance evaluates without transcendentals (fast family).
 BASIC_PS = (1.0, 2.0)
@@ -36,24 +36,43 @@ _abs_diff_pow = abs_pow
 _root = lp_root
 
 
-@partial(jax.jit, static_argnames=("p", "root"))
-def lp_distance(x: jax.Array, y: jax.Array, p: float, root: bool = True) -> jax.Array:
-    """Lp distance between broadcast-compatible vectors along the last axis.
+def _as_p_vec(p) -> jax.Array:
+    """Coerce a per-query p to a (B,) float32 array (the traced-p contract).
 
-    With root=False returns sum(|x-y|^p) (same ordering, cheaper), which is
-    what the search loops use internally.
+    A 0-d jax scalar becomes (1,) so it broadcasts as "one p for every
+    row" instead of crashing the per-row indexing.
     """
+    p = jnp.asarray(p, dtype=jnp.float32)
+    return p[None] if p.ndim == 0 else p
+
+
+@partial(jax.jit, static_argnames=("p", "root"))
+def _lp_distance_s(x, y, p: float, root: bool):
     s = jnp.sum(_abs_diff_pow(x - y, p), axis=-1)
     return _root(s, p) if root else s
 
 
-@partial(jax.jit, static_argnames=("p", "root"))
-def pairwise_lp(q: jax.Array, x: jax.Array, p: float, root: bool = True) -> jax.Array:
-    """All-pairs Lp distances: q (B, d) vs x (N, d) -> (B, N).
+@partial(jax.jit, static_argnames=("root",))
+def _lp_distance_v(x, y, p, root: bool):
+    s = jnp.sum(_abs_diff_pow(x - y, p[..., None]), axis=-1)
+    return _root(s, p) if root else s
 
-    For p=2 uses the MXU-friendly matmul identity (this is the TPU analogue of
-    the paper's SIMD L2 fast path). Other p-values broadcast on the VPU.
+
+def lp_distance(x: jax.Array, y: jax.Array, p, root: bool = True) -> jax.Array:
+    """Lp distance between broadcast-compatible vectors along the last axis.
+
+    p: Python float (one compiled program per p) or an array broadcastable
+    to the *result* shape (per-element metric; one program for any p mix —
+    DESIGN.md §6). With root=False returns sum(|x-y|^p) (same ordering,
+    cheaper), which is what the search loops use internally.
     """
+    if is_static_p(p):
+        return _lp_distance_s(x, y, float(p), root)
+    return _lp_distance_v(x, y, _as_p_vec(p), root)
+
+
+@partial(jax.jit, static_argnames=("p", "root"))
+def _pairwise_lp_s(q, x, p: float, root: bool):
     if p == 2.0:
         qq = jnp.sum(q * q, axis=-1)
         xx = jnp.sum(x * x, axis=-1)
@@ -64,15 +83,56 @@ def pairwise_lp(q: jax.Array, x: jax.Array, p: float, root: bool = True) -> jax.
     return _root(s, p) if root else s
 
 
-@partial(jax.jit, static_argnames=("p", "root"))
-def rowwise_lp(q: jax.Array, c: jax.Array, p: float, root: bool = True) -> jax.Array:
-    """Per-row candidate distances: q (B, d) vs c (B, C, d) -> (B, C).
+@partial(jax.jit, static_argnames=("root",))
+def _pairwise_lp_v(q, x, p, root: bool):
+    # Elementwise family selection; rows with p == 2 additionally take the
+    # MXU matmul-identity value so they match the scalar p=2 path bit-for-bit
+    # (the elementwise diff^2 sum and the matmul identity round differently).
+    s = jnp.sum(_abs_diff_pow(q[:, None, :] - x[None, :, :], p[:, None, None]),
+                axis=-1)
+    qq = jnp.sum(q * q, axis=-1)
+    xx = jnp.sum(x * x, axis=-1)
+    s2 = jnp.maximum(qq[:, None] + xx[None, :] - 2.0 * (q @ x.T), 0.0)
+    s = jnp.where(p[:, None] == 2.0, s2, s)
+    return _root(s, p[:, None]) if root else s
 
-    This is the verification-step shape: each query has its own gathered
-    candidate block.
+
+def pairwise_lp(q: jax.Array, x: jax.Array, p, root: bool = True) -> jax.Array:
+    """All-pairs Lp distances: q (B, d) f32 vs x (N, d) f32 -> (B, N) f32.
+
+    p: Python float, or a (B,) array giving each query row its own metric
+    (the mixed-p serving contract, DESIGN.md §6). For p=2 — the scalar
+    specialization *and* vector rows equal to 2 — uses the MXU-friendly
+    matmul identity (the TPU analogue of the paper's SIMD L2 fast path).
+    Other p-values broadcast on the VPU.
     """
+    if is_static_p(p):
+        return _pairwise_lp_s(q, x, float(p), root)
+    return _pairwise_lp_v(q, x, _as_p_vec(p), root)
+
+
+@partial(jax.jit, static_argnames=("p", "root"))
+def _rowwise_lp_s(q, c, p: float, root: bool):
     s = jnp.sum(_abs_diff_pow(q[:, None, :] - c, p), axis=-1)
     return _root(s, p) if root else s
+
+
+@partial(jax.jit, static_argnames=("root",))
+def _rowwise_lp_v(q, c, p, root: bool):
+    s = jnp.sum(_abs_diff_pow(q[:, None, :] - c, p[:, None, None]), axis=-1)
+    return _root(s, p[:, None]) if root else s
+
+
+def rowwise_lp(q: jax.Array, c: jax.Array, p, root: bool = True) -> jax.Array:
+    """Per-row candidate distances: q (B, d) f32 vs c (B, C, d) f32 -> (B, C).
+
+    This is the verification-step shape: each query has its own gathered
+    candidate block. p: Python float or (B,) array — row i is scored under
+    p[i] (scalar-vs-vector contract, DESIGN.md §6).
+    """
+    if is_static_p(p):
+        return _rowwise_lp_s(q, c, float(p), root)
+    return _rowwise_lp_v(q, c, _as_p_vec(p), root)
 
 
 # ---------------------------------------------------------------------------
@@ -121,11 +181,23 @@ def transcendental_op_count(p: float, d: int) -> int:
     return 2 * d  # log + exp per element
 
 
-def base_metric_for(p: float, cutoff: float = 1.4) -> float:
-    """U-HNSW base-index selection rule (paper Alg. 1 line 3): G1 iff p <= 1.4."""
-    if not 0.5 <= p <= 2.0:
+def base_metric_for(p, cutoff: float = 1.4):
+    """U-HNSW base-index selection rule (paper Alg. 1 line 3): G1 iff p <= 1.4.
+
+    Scalar p -> scalar 1.0/2.0. Array p (a mixed-p batch) -> same-shape f32
+    array: the *two-way* G1/G2 partition of the batch (DESIGN.md §6) — the
+    number of distinct p values never matters, only which side of the
+    cutoff each row falls on.
+    """
+    import numpy as np
+
+    pa = np.asarray(p, dtype=np.float32)
+    # NaN must fail too, so phrase the check as "all inside", not "any outside"
+    if not np.all((pa >= 0.5) & (pa <= 2.0)):
         raise ValueError(f"p={p} outside the supported universal range [0.5, 2]")
-    return 1.0 if p <= cutoff else 2.0
+    if pa.ndim == 0:
+        return 1.0 if float(pa) <= cutoff else 2.0
+    return np.where(pa <= cutoff, np.float32(1.0), np.float32(2.0))
 
 
 def numpy_lp(q, x, p: float, root: bool = True):

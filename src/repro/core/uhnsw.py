@@ -36,7 +36,26 @@ from repro.core.metrics import base_metric_for
 
 @dataclass(frozen=True)
 class UHNSWParams:
-    """Query-time parameters (paper Algorithm 1 + §3.2)."""
+    """Query-time parameters (paper Algorithm 1 + §3.2).
+
+    Attributes:
+      t: candidate set size fed to verification (paper §3.2; default 300).
+      tau: early-termination threshold |R_new ∩ R| / K (target recall
+        + 0.02; paper §3.1).
+      kappa: verification batch size; None -> K // 2 (paper §3.1).
+      cutoff: base-index selection crossover — G1 (L1) serves p <= cutoff,
+        G2 (L2) the rest (paper Fig. 2). Applies per *query row* in a
+        mixed-p batch (DESIGN.md §6).
+      ef: beam width for candidate generation; None -> 2t.
+      max_hops: hard cap on while_loop trips per layer (safety bound).
+      expand_width: W-way multi-expansion in the level-0 beam
+        (DESIGN.md §2.1); 1 = classic HNSW.
+      interpret: exact-Lp scoring backend override, forwarded to
+        `kernels.ops.lp_gather_distance` (DESIGN.md §2.1): None =
+        backend-aware (fused Pallas kernel on TPU, jnp reference
+        elsewhere), True = Pallas kernel in interpret mode (CPU parity
+        testing), False = compiled Pallas kernel.
+    """
 
     t: int = 300          # candidate set size
     tau: float = 0.92     # early-termination threshold (target recall + 0.02)
@@ -46,36 +65,34 @@ class UHNSWParams:
     max_hops: int = 4096
     expand_width: int = 1  # W-way multi-expansion in the level-0 beam
                            # (DESIGN.md §2 hot path); 1 = classic HNSW
+    interpret: bool | None = None  # exact-Lp kernel dispatch override
 
 
 class SearchStats(NamedTuple):
     n_b: jax.Array        # (B,) base-metric Q2D evaluation counts
     n_p: jax.Array        # (B,) Lp Q2D evaluation counts
     iterations: jax.Array  # () verification loop iterations executed
-    base_p: float         # which base metric generated candidates
+    base_p: float | np.ndarray  # which base metric generated candidates:
+                                # scalar for a single-p batch, (B,) array
+                                # for a mixed-p batch (DESIGN.md §6)
     hops: jax.Array | int = 0  # (B,) level-0 while_loop trips (one trip
                                # expands up to expand_width beam entries)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "k", "kappa", "tau"))
-def verify_candidates(
+def _verify_impl(
     Q: jax.Array,         # (B, d)
     cand_ids: jax.Array,  # (B, t) sorted ascending by base-metric distance
     X: jax.Array,         # (n, d)
-    p: float,
+    p,                    # static float, or traced (B,) f32
     k: int,
     kappa: int,
     tau: float,
+    interpret: bool | None,
 ):
-    """Early-terminated exact-Lp re-ranking (Algorithm 1 lines 7-11).
-
-    Returns (ids (B,k), dists (B,k) with root applied, n_p (B,), iters ()).
-
-    Candidate ids outside [0, n) are padding (sentinels from underfilled
-    beams / merges) and are scored as inf so they can never enter R.
-    """
     B, t = cand_ids.shape
     n_batches = max((t - k) // kappa, 0)
+    # the root broadcast: scalar p applies as-is, per-row p gains a column
+    p_col = p if metrics.is_static_p(p) else p[:, None]
 
     # Imported at trace time (not module scope): repro.core.__init__ pulls in
     # this module, so a top-level kernels import here would make the
@@ -88,7 +105,8 @@ def verify_candidates(
         Routed through the single dispatch entry point (kernels/ops.py):
         fused gather+distance Pallas kernel on TPU, jnp reference off-TPU.
         """
-        return lp_gather_distance(Q, ids, X, p, root=False)
+        return lp_gather_distance(Q, ids, X, p, root=False,
+                                  interpret=interpret)
 
     def topk_merge(ids_a, d_a, ids_b, d_b):
         ids = jnp.concatenate([ids_a, ids_b], axis=1)
@@ -103,7 +121,7 @@ def verify_candidates(
     n_p0 = jnp.full((B,), k, dtype=jnp.int32)
 
     if n_batches == 0:
-        return r_ids, metrics._root(r_dist, p), n_p0, jnp.int32(0)
+        return r_ids, metrics._root(r_dist, p_col), n_p0, jnp.int32(0)
 
     def cond(s):
         i, _, _, done, _ = s
@@ -127,11 +145,143 @@ def verify_candidates(
 
     state = (jnp.int32(0), r_ids, r_dist, jnp.zeros((B,), bool), n_p0)
     iters, r_ids, r_dist, done, n_p = jax.lax.while_loop(cond, body, state)
-    return r_ids, metrics._root(r_dist, p), n_p, iters
+    return r_ids, metrics._root(r_dist, p_col), n_p, iters
+
+
+_verify_jit_s = functools.partial(
+    jax.jit, static_argnames=("p", "k", "kappa", "tau", "interpret")
+)(_verify_impl)
+_verify_jit_v = functools.partial(
+    jax.jit, static_argnames=("k", "kappa", "tau", "interpret")
+)(_verify_impl)
+
+
+def verify_candidates(
+    Q: jax.Array,         # (B, d) f32
+    cand_ids: jax.Array,  # (B, t) int32, sorted ascending by base distance
+    X: jax.Array,         # (n, d) f32
+    p,
+    k: int,
+    kappa: int,
+    tau: float,
+    interpret: bool | None = None,
+):
+    """Early-terminated exact-Lp re-ranking (Algorithm 1 lines 7-11).
+
+    Returns (ids (B, k) int32, dists (B, k) f32 with root applied,
+    n_p (B,) int32, iters () int32).
+
+    p follows the scalar-vs-vector contract (DESIGN.md §6): a Python float
+    re-ranks the whole batch under one metric (one compiled program per p);
+    a (B,) array re-ranks row i under p[i] in ONE compiled program, each
+    row bit-identical to the scalar call at its p. In a mixed batch the
+    convergence `while_loop` runs until *every* row terminates, but rows
+    freeze their (ids, dists, n_p) the moment they individually converge,
+    so per-row results and Eq. 1 `N_p` accounting are independent of batch
+    composition.
+
+    Candidate ids outside [0, n) are padding (sentinels from underfilled
+    beams / merges) and are scored as inf so they can never enter R.
+    `interpret` forwards to `lp_gather_distance` (None = backend-aware).
+    """
+    if metrics.is_static_p(p):
+        return _verify_jit_s(Q, cand_ids, X, float(p), k, kappa, tau,
+                             interpret)
+    return _verify_jit_v(Q, cand_ids, X,
+                         jnp.atleast_1d(jnp.asarray(p, jnp.float32)),
+                         k, kappa, tau, interpret)
+
+
+def mask_base_rows(cand_ids, cand_dists, ids, dists, n_p, p_vec, base_p,
+                   k: int):
+    """Per-row base-metric skip (paper §3 preamble) inside a mixed batch.
+
+    Rows whose p equals the base metric take the beam's own ordering —
+    the exact values the scalar skip path produces — and report n_p = 0.
+    """
+    pj = jnp.asarray(p_vec, dtype=jnp.float32)
+    is_base = pj == base_p
+    ids = jnp.where(is_base[:, None], cand_ids[:, :k], ids)
+    dists = jnp.where(is_base[:, None],
+                      metrics._root(cand_dists[:, :k], pj[:, None]),
+                      dists)
+    n_p = jnp.where(is_base, 0, n_p)
+    return ids, dists, n_p
+
+
+def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
+    """Shared mixed-p driver: two-way G1/G2 partition + scatter (DESIGN.md
+    §6). Used by both UHNSW and ShardedUHNSW.
+
+    search_base_vec(Q_sub (B', d), p_sub (B',) f32, k, base_p) must run one
+    homogeneous-base sub-batch and return (ids, dists, n_p, iters, n_b,
+    hops). Returns (ids (B, k), dists (B, k), SearchStats) with per-row
+    stats scattered back into request order; stats.base_p is the (B,)
+    base-metric array.
+    """
+    Q = jnp.asarray(Q, dtype=jnp.float32)
+    b = Q.shape[0]
+    p_arr = np.asarray(p, dtype=np.float32).reshape(-1)
+    if p_arr.size == 1:
+        p_arr = np.full(b, p_arr[0], dtype=np.float32)
+    assert p_arr.shape[0] == b, (p_arr.shape, b)
+    base = np.asarray(metrics.base_metric_for(p_arr, cutoff))
+    ids = np.zeros((b, k), np.int32)
+    dists = np.zeros((b, k), np.float32)
+    n_b = np.zeros(b, np.int32)
+    n_p = np.zeros(b, np.int32)
+    hops = np.zeros(b, np.int32)
+    iters = 0
+    for base_p in (1.0, 2.0):
+        sel = np.flatnonzero(base == base_p)
+        if sel.size == 0:
+            continue
+        s_ids, s_dists, s_np, s_it, s_nb, s_hops = search_base_vec(
+            Q[sel], p_arr[sel], k, base_p
+        )
+        ids[sel] = np.asarray(s_ids)
+        dists[sel] = np.asarray(s_dists)
+        n_b[sel] = np.asarray(s_nb)
+        n_p[sel] = np.asarray(s_np)
+        hops[sel] = np.asarray(s_hops)
+        iters = max(iters, int(s_it))
+    stats = SearchStats(
+        n_b=jnp.asarray(n_b), n_p=jnp.asarray(n_p),
+        iterations=jnp.int32(iters), base_p=base, hops=jnp.asarray(hops),
+    )
+    return jnp.asarray(ids), jnp.asarray(dists), stats
+
+
+def modeled_query_cost(stats: SearchStats, p, d: int) -> dict:
+    """T_query = N_b * T_b + N_p * T_p (paper Eq. 1) via the TPU op-cost
+    model. p and stats.base_p may be scalars or (B,) arrays (mixed-p
+    batch); array inputs report batch-mean per-distance costs."""
+    t_b = float(np.mean([metrics.lp_distance_cost_model(float(bp), d)
+                         for bp in np.atleast_1d(stats.base_p)]))
+    t_p = float(np.mean([metrics.lp_distance_cost_model(float(pp), d)
+                         for pp in np.atleast_1d(np.asarray(p))]))
+    n_b = float(jnp.mean(stats.n_b))
+    n_p = float(jnp.mean(stats.n_p))
+    return {"N_b": n_b, "N_p": n_p, "T_b": t_b, "T_p": t_p,
+            "total": n_b * t_b + n_p * t_p}
 
 
 class UHNSW:
-    """The paper's index: two HNSW graphs (G1 under L1, G2 under L2)."""
+    """The paper's index: two HNSW graphs (G1 under L1, G2 under L2).
+
+    Public contract:
+      * `search(Q, p, k)` — batched ANNS-U-Lp (Algorithm 1). Q: (B, d)
+        f32; p: Python float (whole batch under one metric) or (B,) array
+        (each row under its own metric — the mixed-p serving contract,
+        DESIGN.md §6); k: result size. Returns (ids (B, k) int32, rooted
+        dists (B, k) f32, SearchStats).
+      * `base_graph_for(p)` — scalar-p base-graph pick; a mixed-p batch is
+        instead *two-way partitioned* (G1 rows / G2 rows) inside `search`.
+      * `build(...)` — sequential paper-faithful construction; prefer
+        `build_hnsw_bulk` + the constructor at benchmark scale.
+
+    Supported p range is the paper's universal family [0.5, 2].
+    """
 
     def __init__(self, g1: HNSWGraph, g2: HNSWGraph, params: UHNSWParams | None = None):
         assert g1.metric_p == 1.0 and g2.metric_p == 2.0
@@ -167,13 +317,34 @@ class UHNSW:
     # -- query --------------------------------------------------------------
 
     def base_graph_for(self, p: float) -> tuple[GraphArrays, float]:
+        """Scalar-p base-graph pick (paper Alg. 1 line 3): G1 iff p <= cutoff.
+
+        Mixed-p batches never call this per request — `_search_mixed` does
+        the two-way G1/G2 partition with `metrics.base_metric_for` on the
+        whole p vector instead (DESIGN.md §6).
+        """
         base = base_metric_for(p, self.params.cutoff)
         return (self.arrays1, 1.0) if base == 1.0 else (self.arrays2, 2.0)
 
-    def search(self, Q, p: float, k: int):
-        """Batched ANNS-U-Lp query (Algorithm 1). Q: (B, d); one p per batch
-        (the host-level dispatcher groups a mixed-p stream by p; see
-        repro.retrieval.service)."""
+    def search(self, Q, p, k: int):
+        """Batched ANNS-U-Lp query (Algorithm 1).
+
+        Q: (B, d) f32. p: Python float (whole batch, one metric) or (B,)
+        array — the mixed-p form partitions the batch *two ways* by base
+        graph (G1/G2, never one group per distinct p) and runs one vector-p
+        program per side; each row's result is bit-identical to the scalar
+        call at its p (DESIGN.md §6). Returns (ids (B, k) int32, rooted
+        dists (B, k) f32, SearchStats with per-row n_b/n_p/hops).
+
+        The serving scheduler (repro.retrieval.service) pre-partitions its
+        buckets by base graph, so each scheduled call hits exactly one side
+        here — fixed shapes, two compiled entry points total.
+        """
+        if metrics.is_static_p(p):
+            return self._search_scalar(Q, float(p), k)
+        return self._search_mixed(Q, p, k)
+
+    def _search_scalar(self, Q, p: float, k: int):
         prm = self.params
         Q = jnp.asarray(Q, dtype=jnp.float32)
         arrays, base_p = self.base_graph_for(p)
@@ -196,26 +367,45 @@ class UHNSW:
             return ids, dists, stats
         kappa = prm.kappa or max(k // 2, 1)
         ids, dists, n_p, iters = verify_candidates(
-            Q, cand_ids, self.X, p, k, kappa, prm.tau
+            Q, cand_ids, self.X, p, k, kappa, prm.tau,
+            interpret=prm.interpret,
         )
         return ids, dists, SearchStats(n_b=n_b, n_p=n_p, iterations=iters,
                                        base_p=base_p, hops=hops)
 
+    def _search_base_vec(self, Q, p_vec, k: int, base_p: float):
+        """One homogeneous-base sub-batch with per-row p (traced-p program).
+
+        Rows whose p equals the base metric take the beam's own ordering
+        (the paper's special-p skip) via a per-row mask, so they return the
+        exact values the scalar skip path produces.
+        """
+        prm = self.params
+        arrays = self.arrays1 if base_p == 1.0 else self.arrays2
+        ef = max(prm.ef or 2 * prm.t, prm.t)
+        cand_ids, cand_dists, n_b, hops = knn_search(
+            arrays, self.X, Q, ef=ef, t=prm.t, max_hops=prm.max_hops,
+            expand_width=min(prm.expand_width, ef),
+        )
+        kappa = prm.kappa or max(k // 2, 1)
+        ids, dists, n_p, iters = verify_candidates(
+            Q, cand_ids, self.X, p_vec, k, kappa, prm.tau,
+            interpret=prm.interpret,
+        )
+        ids, dists, n_p = mask_base_rows(cand_ids, cand_dists, ids, dists,
+                                         n_p, p_vec, base_p, k)
+        return ids, dists, n_p, iters, n_b, hops
+
+    def _search_mixed(self, Q, p, k: int):
+        """Mixed-p batch: two-way G1/G2 partition + per-row-p programs."""
+        return two_way_mixed_search(Q, p, k, self.params.cutoff,
+                                    self._search_base_vec)
+
     # -- paper Eq. 1 cost model ---------------------------------------------
 
-    def modeled_query_cost(self, stats: SearchStats, p: float, d: int) -> dict:
-        """T_query = N_b * T_b + N_p * T_p with the TPU op-cost model."""
-        t_b = metrics.lp_distance_cost_model(stats.base_p, d)
-        t_p = metrics.lp_distance_cost_model(p, d)
-        n_b = float(jnp.mean(stats.n_b))
-        n_p = float(jnp.mean(stats.n_p))
-        return {
-            "N_b": n_b,
-            "N_p": n_p,
-            "T_b": t_b,
-            "T_p": t_p,
-            "total": n_b * t_b + n_p * t_p,
-        }
+    def modeled_query_cost(self, stats: SearchStats, p, d: int) -> dict:
+        """Paper Eq. 1 cost split — see the module-level helper."""
+        return modeled_query_cost(stats, p, d)
 
 
 def recall(pred_ids, true_ids) -> float:

@@ -65,17 +65,22 @@ class DeltaBuffer:
         self._vecs, self._ids, self._cache = [], [], None
         return vecs, ids
 
-    def search(self, Q: jax.Array, p: float) -> tuple[jax.Array, jax.Array]:
+    def search(self, Q: jax.Array, p,
+               interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
         """Exact rooted Lp distances of every buffered vector to each query.
 
-        Returns (ids (B, n_delta) int32 global, dists (B, n_delta) f32).
-        Empty buffer -> (B, 0) arrays, so callers can concatenate blindly.
+        Q: (B, d) f32. p: Python float or (B,) array — row i of a mixed-p
+        batch is scored under p[i] (the scalar-vs-vector contract,
+        DESIGN.md §6). Returns (ids (B, n_delta) int32 global, dists
+        (B, n_delta) f32). Empty buffer -> (B, 0) arrays, so callers can
+        concatenate blindly.
 
         Scoring routes through the exact-Lp dispatch entry point
         (kernels/ops.lp_gather_distance) like every other query-path Lp
         eval — in its 1-D shared-ids form, which the dispatcher runs as one
         pairwise block over the once-gathered buffer (no per-query
-        re-gather; p=2 keeps its MXU matmul).
+        re-gather; p=2 keeps its MXU matmul, for vector p via the per-row
+        identity selection). `interpret` forwards to the dispatcher.
         """
         b = Q.shape[0]
         if not self._vecs:
@@ -86,7 +91,8 @@ class DeltaBuffer:
         from repro.kernels.ops import lp_gather_distance
 
         rows = jnp.arange(len(self._vecs), dtype=jnp.int32)
-        dists = lp_gather_distance(Q, rows, self._cache, p, root=True)
+        dists = lp_gather_distance(Q, rows, self._cache, p, root=True,
+                                   interpret=interpret)
         ids = jnp.broadcast_to(jnp.asarray(self.ids())[None, :],
                                (b, len(self._vecs)))
         return ids, dists

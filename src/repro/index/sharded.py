@@ -35,7 +35,14 @@ import numpy as np
 from repro.core import metrics
 from repro.core.hnsw import GraphArrays, knn_search
 from repro.core.metrics import base_metric_for
-from repro.core.uhnsw import SearchStats, UHNSWParams, verify_candidates
+from repro.core.uhnsw import (
+    SearchStats,
+    UHNSWParams,
+    mask_base_rows,
+    modeled_query_cost,
+    two_way_mixed_search,
+    verify_candidates,
+)
 from repro.index.delta import DeltaBuffer
 from repro.index.segment import SegmentedGraphs, build_segment_pair, build_segments
 
@@ -82,8 +89,16 @@ class ShardedUHNSW:
     """Segmented U-HNSW index with streaming inserts.
 
     Drop-in for UHNSW at the serving layer: `search(Q, p, k)` has the same
-    contract (ids, rooted dists, SearchStats). Adds `add(vec)` for online
-    insertion and `shard_over(rt)` for multi-device placement.
+    contract — Q (B, d) f32; p a Python float or a (B,) array (each query
+    row under its own metric, DESIGN.md §6); returns (ids (B, k) int32,
+    rooted dists (B, k) f32, SearchStats with per-row n_b/n_p/hops). Adds
+    `add(vec)` for online insertion (O(1), delta tier; DESIGN.md §3) and
+    `shard_over(rt)` for multi-device placement (segment axis over the
+    mesh's data axes).
+
+    Mixed-p batches partition two ways by base graph (G1/G2) — never one
+    group per distinct p — and each side runs one traced-p program whose
+    per-row results are bit-identical to the scalar-p call at that row's p.
     """
 
     def __init__(
@@ -172,24 +187,33 @@ class ShardedUHNSW:
     # -- query --------------------------------------------------------------
 
     def base_arrays_for(self, p: float) -> tuple[GraphArrays, float]:
+        """Scalar-p base-graph pick (G1 iff p <= cutoff); mixed-p batches
+        use the two-way partition in `_search_mixed` instead."""
         base = base_metric_for(p, self.params.cutoff)
         seg = self.segments
         return (seg.arrays1, 1.0) if base == 1.0 else (seg.arrays2, 2.0)
 
-    def search(self, Q, p: float, k: int):
-        """Batched ANNS-U-Lp over all segments + delta. Q: (B, d)."""
+    def search(self, Q, p, k: int):
+        """Batched ANNS-U-Lp over all segments + delta.
+
+        Q: (B, d) f32; p: Python float or (B,) array (mixed-p batch — see
+        the class docstring); returns (ids (B, k) int32, rooted dists
+        (B, k) f32, SearchStats).
+        """
+        if metrics.is_static_p(p):
+            p = float(p)
+            ids, dists, n_p, iters, n_b, hops, base_p = \
+                self._graph_search_scalar(Q, p, k)
+            return self._merge_delta(Q, p, k, ids, dists, n_p, iters, n_b,
+                                     hops, base_p)
+        return self._search_mixed(Q, p, k)
+
+    def _graph_search_scalar(self, Q, p: float, k: int):
+        """Frozen-segment search for a single-p batch (no delta merge)."""
         prm = self.params
         Q = jnp.asarray(Q, dtype=jnp.float32)
         arrays, base_p = self.base_arrays_for(p)
-        n_frozen = sum(g.n for g in self.segments.graphs1)
-        t = min(prm.t, n_frozen)
-        ef = max(prm.ef or 2 * prm.t, t)
-        cand_ids, cand_dists, n_b, hops = segmented_knn_search(
-            arrays, self.segments.X, self.segments.node_ids, Q,
-            ef=ef, t=t, max_hops=prm.max_hops,
-            # degenerate tiny beams can't host the full W; clamp, don't fail
-            expand_width=min(prm.expand_width, ef),
-        )
+        cand_ids, cand_dists, n_b, hops = self._segment_candidates(arrays, Q)
         if p == base_p:
             # base-metric query: the merged graph ordering is already exact
             ids = cand_ids[:, :k]
@@ -200,10 +224,60 @@ class ShardedUHNSW:
             kappa = prm.kappa or max(k // 2, 1)
             # -1 padding passes through: verify_candidates scores it as inf
             ids, dists, n_p, iters = verify_candidates(
-                Q, cand_ids, self.X, p, k, kappa, prm.tau
+                Q, cand_ids, self.X, p, k, kappa, prm.tau,
+                interpret=prm.interpret,
             )
+        return ids, dists, n_p, iters, n_b, hops, base_p
+
+    def _segment_candidates(self, arrays, Q):
+        """Vmapped per-segment beam search + one-sort merge (DESIGN.md §3)."""
+        prm = self.params
+        n_frozen = sum(g.n for g in self.segments.graphs1)
+        t = min(prm.t, n_frozen)
+        ef = max(prm.ef or 2 * prm.t, t)
+        return segmented_knn_search(
+            arrays, self.segments.X, self.segments.node_ids, Q,
+            ef=ef, t=t, max_hops=prm.max_hops,
+            # degenerate tiny beams can't host the full W; clamp, don't fail
+            expand_width=min(prm.expand_width, ef),
+        )
+
+    def _graph_search_base_vec(self, Q, p_vec, k: int, base_p: float):
+        """One homogeneous-base sub-batch with per-row p (traced-p program),
+        mirroring UHNSW._search_base_vec over the segmented candidates."""
+        prm = self.params
+        seg = self.segments
+        arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
+        cand_ids, cand_dists, n_b, hops = self._segment_candidates(arrays, Q)
+        kappa = prm.kappa or max(k // 2, 1)
+        ids, dists, n_p, iters = verify_candidates(
+            Q, cand_ids, self.X, p_vec, k, kappa, prm.tau,
+            interpret=prm.interpret,
+        )
+        ids, dists, n_p = mask_base_rows(cand_ids, cand_dists, ids, dists,
+                                         n_p, p_vec, base_p, k)
+        return ids, dists, n_p, iters, n_b, hops
+
+    def _search_mixed(self, Q, p, k: int):
+        """Mixed-p batch: two-way G1/G2 partition, then one delta merge."""
+        ids, dists, stats = two_way_mixed_search(
+            Q, p, k, self.params.cutoff, self._graph_search_base_vec
+        )
+        p_arr = np.asarray(stats.base_p)  # aligned (B,) — reuse its shape
+        p_arr = np.broadcast_to(np.asarray(p, np.float32).reshape(-1),
+                                p_arr.shape)
+        return self._merge_delta(Q, p_arr, k, ids, dists, stats.n_p,
+                                 stats.iterations, stats.n_b, stats.hops,
+                                 stats.base_p)
+
+    def _merge_delta(self, Q, p, k, ids, dists, n_p, iters, n_b, hops,
+                     base_p):
+        """Sort-merge exact delta-tier hits into the verified top-k."""
         if len(self.delta):
-            d_ids, d_dists = self.delta.search(Q, p)
+            d_ids, d_dists = self.delta.search(
+                jnp.asarray(Q, dtype=jnp.float32), p,
+                interpret=self.params.interpret,
+            )
             all_ids = jnp.concatenate([ids, d_ids], axis=1)
             all_d = jnp.concatenate([dists, d_dists], axis=1)
             sd, si = jax.lax.sort((all_d, all_ids), num_keys=1)
@@ -213,14 +287,9 @@ class ShardedUHNSW:
                             hops=hops)
         return ids, dists, stats
 
-    def modeled_query_cost(self, stats: SearchStats, p: float, d: int) -> dict:
-        """T_query = N_b * T_b + N_p * T_p (paper Eq. 1), as in UHNSW."""
-        t_b = metrics.lp_distance_cost_model(stats.base_p, d)
-        t_p = metrics.lp_distance_cost_model(p, d)
-        n_b = float(jnp.mean(stats.n_b))
-        n_p = float(jnp.mean(stats.n_p))
-        return {"N_b": n_b, "N_p": n_p, "T_b": t_b, "T_p": t_p,
-                "total": n_b * t_b + n_p * t_p}
+    def modeled_query_cost(self, stats: SearchStats, p, d: int) -> dict:
+        """Paper Eq. 1 cost split — the shared core/uhnsw helper."""
+        return modeled_query_cost(stats, p, d)
 
     # -- streaming inserts --------------------------------------------------
 

@@ -33,7 +33,34 @@ from jax.experimental.pallas import tpu as pltpu
 # The per-p op-sequence table is shared with the jnp reference metrics
 # (repro.core.lp_ops) so kernel and oracle cannot drift.
 from repro.core.lp_ops import abs_pow as _abs_pow
-from repro.core.lp_ops import lp_root as _root
+from repro.core.lp_ops import is_static_p
+# Kernel bodies use the fold-friendly root: no optimization_barrier inside
+# Mosaic-lowered code (traced per-row p takes runtime division regardless).
+from repro.core.lp_ops import lp_root_folded as _root
+
+# Every kernel here takes p either as a Python float (per-p compile-time
+# specialization — the classic path) or as a per-query-row array (the
+# mixed-p serving path, DESIGN.md §6). Vector p reaches the kernel as a
+# pre-padded (B, 1) f32 operand tiled (TB, 1); the body reads one traced
+# scalar per query row and the shared op-sequence table's where-select
+# reproduces each row's scalar op sequence bit-for-bit (rows with p == 2
+# additionally take the same MXU matmul-identity branch the scalar p=2
+# kernel uses). All three vector-p kernels share `_row_dist_block` so the
+# parity-critical op sequence cannot drift between entry points.
+
+
+def _row_dist_block(qi: jax.Array, c: jax.Array, pi) -> jax.Array:
+    """One query row vs a (TC, d) candidate tile under traced per-row p.
+
+    The elementwise family table scores every p; rows with pi == 2 take
+    the MXU matmul-identity value instead (the same expression the scalar
+    p=2 kernels emit, including the cancellation clamp).
+    """
+    s = jnp.sum(_abs_pow(c - qi[None, :], pi), axis=-1)
+    s2 = jnp.sum(qi * qi) + jnp.sum(c * c, axis=-1) - 2.0 * jnp.dot(
+        c, qi, preferred_element_type=jnp.float32
+    )
+    return jnp.where(pi == 2.0, jnp.maximum(s2, 0.0), s)
 
 
 # ---------------------------------------------------------------------------
@@ -66,10 +93,42 @@ def _pairwise_vpu_kernel(q_ref, x_ref, o_ref, *, p: float, root: bool):
     jax.lax.fori_loop(0, tb, body, 0)
 
 
+def _pairwise_vec_kernel(p_ref, q_ref, x_ref, o_ref, *, root: bool):
+    """Mixed-p path: per-row traced p; p==2 rows take the MXU identity.
+
+    The identity term is hoisted as one (TB, TN) matmul — the same shape
+    the scalar `_pairwise_l2_kernel` emits, so p==2 rows are bit-identical
+    to the scalar p=2 kernel. (The fast/slow VPU families match the scalar
+    VPU kernel's op sequences exactly; XLA's fusion choices can still
+    reassociate the d-axis sum by 1 ulp on some tile shapes for p=1.5, so
+    only the gather/rowwise entry points — the serving hot path — carry
+    the hard bit-parity contract.)
+    """
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    qq = jnp.sum(q * q, axis=-1)
+    xx = jnp.sum(x * x, axis=-1)
+    s2 = qq[:, None] + xx[None, :] - 2.0 * jnp.dot(
+        q, x.T, preferred_element_type=jnp.float32
+    )
+    s2 = jnp.maximum(s2, 0.0)
+    tb = q.shape[0]
+
+    def body(i, _):
+        pi = p_ref[i, 0]
+        qi = q[i, :]
+        s = jnp.sum(_abs_pow(x - qi[None, :], pi), axis=-1)
+        s = jnp.where(pi == 2.0, s2[i, :], s)
+        o_ref[i, :] = (_root(s, pi) if root else s).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, tb, body, 0)
+
+
 def pairwise_lp_kernel_call(
     q: jax.Array,
     x: jax.Array,
-    p: float,
+    p,
     *,
     root: bool = True,
     block_b: int = 128,
@@ -77,10 +136,29 @@ def pairwise_lp_kernel_call(
     interpret: bool = False,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """Raw pallas_call for pre-padded inputs (B % block_b == N % block_n == 0)."""
+    """Raw pallas_call for pre-padded inputs (B % block_b == N % block_n == 0).
+
+    p: Python float, or a pre-padded (B, 1) f32 array (one metric per query
+    row — the mixed-p contract described in the module preamble).
+    """
     b, d = q.shape
     n, _ = x.shape
     assert b % block_b == 0 and n % block_n == 0, (b, n, block_b, block_n)
+
+    if not is_static_p(p):
+        assert p.shape == (b, 1), (p.shape, b)
+        return pl.pallas_call(
+            functools.partial(_pairwise_vec_kernel, root=root),
+            grid=(b // block_b, n // block_n),
+            in_specs=[
+                pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((b, n), out_dtype),
+            interpret=interpret,
+        )(p, q, x)
 
     if p == 2.0:
         kernel = functools.partial(_pairwise_l2_kernel, root=root)
@@ -136,10 +214,25 @@ def _rowwise_vpu_kernel(q_ref, c_ref, o_ref, *, p: float, root: bool):
     jax.lax.fori_loop(0, tb, body, 0)
 
 
+def _rowwise_vec_kernel(p_ref, q_ref, c_ref, o_ref, *, root: bool):
+    """Mixed-p path: per-row traced p; p==2 rows take the MXU identity."""
+    tb = q_ref.shape[0]
+
+    def body(i, _):
+        pi = p_ref[i, 0]
+        qi = q_ref[i, :].astype(jnp.float32)
+        c = c_ref[i, :, :].astype(jnp.float32)
+        s = _row_dist_block(qi, c, pi)
+        o_ref[i, :] = (_root(s, pi) if root else s).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, tb, body, 0)
+
+
 def rowwise_lp_kernel_call(
     q: jax.Array,
     c: jax.Array,
-    p: float,
+    p,
     *,
     root: bool = True,
     block_b: int = 8,
@@ -147,10 +240,29 @@ def rowwise_lp_kernel_call(
     interpret: bool = False,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """Raw pallas_call for pre-padded inputs (B % block_b == C % block_c == 0)."""
+    """Raw pallas_call for pre-padded inputs (B % block_b == C % block_c == 0).
+
+    p: Python float, or a pre-padded (B, 1) f32 array (one metric per query
+    row — the mixed-p contract described in the module preamble).
+    """
     b, d = q.shape
     b2, cc, _ = c.shape
     assert b == b2 and b % block_b == 0 and cc % block_c == 0
+
+    if not is_static_p(p):
+        assert p.shape == (b, 1), (p.shape, b)
+        return pl.pallas_call(
+            functools.partial(_rowwise_vec_kernel, root=root),
+            grid=(b // block_b, cc // block_c),
+            in_specs=[
+                pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_b, block_c, d), lambda i, j: (i, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((b, cc), out_dtype),
+            interpret=interpret,
+        )(p, q, c)
 
     if p == 2.0:
         kernel = functools.partial(_rowwise_l2_kernel, root=root)
@@ -189,30 +301,39 @@ def rowwise_lp_kernel_call(
 # ---------------------------------------------------------------------------
 
 
+def _dma_gather_rows(ids_row, x_hbm, gx_ref, sem, n: int, block_c: int):
+    """DMA the TC candidate rows of one query into the VMEM scratch.
+
+    DMAs issue sequentially (start/wait per row); a double-buffered variant
+    would overlap row j+1's copy with row j's compute, but the VMEM scratch
+    already bounds the win to DMA latency. Shared by the scalar and
+    vector-p gather kernels.
+    """
+
+    def gather(j, _):
+        safe = jnp.clip(ids_row[j], 0, n - 1)
+        cp = pltpu.make_async_copy(
+            x_hbm.at[pl.ds(safe, 1), :], gx_ref.at[pl.ds(j, 1), :], sem
+        )
+        cp.start()
+        cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, block_c, gather, 0)
+
+
 def _gather_lp_kernel(ids_ref, q_ref, x_hbm, o_ref, gx_ref, sem,
                       *, p: float, root: bool, n: int, block_c: int):
     """One (TB, TC) output tile.
 
     Per query row: TC row DMAs (HBM -> VMEM scratch), then one vectorized
-    (TC, d) distance block. DMAs issue sequentially (start/wait per row);
-    a double-buffered variant would overlap row j+1's copy with row j's
-    compute, but the VMEM scratch already bounds the win to DMA latency.
+    (TC, d) distance block.
     """
     tb = q_ref.shape[0]
 
     def per_query(i, _):
         ids_row = ids_ref[i, :]  # (TC,)
-
-        def gather(j, _):
-            safe = jnp.clip(ids_row[j], 0, n - 1)
-            cp = pltpu.make_async_copy(
-                x_hbm.at[pl.ds(safe, 1), :], gx_ref.at[pl.ds(j, 1), :], sem
-            )
-            cp.start()
-            cp.wait()
-            return 0
-
-        jax.lax.fori_loop(0, block_c, gather, 0)
+        _dma_gather_rows(ids_row, x_hbm, gx_ref, sem, n, block_c)
         qi = q_ref[i, :].astype(jnp.float32)
         ct = gx_ref[...].astype(jnp.float32)  # (TC, d)
         if p == 2.0:
@@ -230,11 +351,33 @@ def _gather_lp_kernel(ids_ref, q_ref, x_hbm, o_ref, gx_ref, sem,
     jax.lax.fori_loop(0, tb, per_query, 0)
 
 
+def _gather_lp_vec_kernel(ids_ref, q_ref, p_ref, x_hbm, o_ref, gx_ref, sem,
+                          *, root: bool, n: int, block_c: int):
+    """Mixed-p variant of `_gather_lp_kernel`: same per-row DMA gather, with
+    each query row scored under its own traced p (p==2 rows take the same
+    MXU-identity branch the scalar p=2 kernel emits)."""
+    tb = q_ref.shape[0]
+
+    def per_query(i, _):
+        ids_row = ids_ref[i, :]  # (TC,)
+        _dma_gather_rows(ids_row, x_hbm, gx_ref, sem, n, block_c)
+        pi = p_ref[i, 0]
+        qi = q_ref[i, :].astype(jnp.float32)
+        ct = gx_ref[...].astype(jnp.float32)  # (TC, d)
+        s = _row_dist_block(qi, ct, pi)
+        val = _root(s, pi) if root else s
+        ok = (ids_row >= 0) & (ids_row < n)
+        o_ref[i, :] = jnp.where(ok, val, jnp.inf).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, tb, per_query, 0)
+
+
 def gather_lp_kernel_call(
     ids: jax.Array,  # (B, C) int32 candidate ids; out-of-range = padding
     q: jax.Array,    # (B, d)
     x: jax.Array,    # (n, d) HBM-resident dataset
-    p: float,
+    p,
     *,
     root: bool = False,
     block_b: int = 8,
@@ -242,12 +385,38 @@ def gather_lp_kernel_call(
     interpret: bool = False,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """Raw pallas_call for pre-padded inputs (B % block_b == C % block_c == 0)."""
+    """Raw pallas_call for pre-padded inputs (B % block_b == C % block_c == 0).
+
+    p: Python float, or a pre-padded (B, 1) f32 array (one metric per query
+    row — the mixed-p contract described in the module preamble).
+    """
     b, d = q.shape
     b2, cc = ids.shape
     n = x.shape[0]
     assert b == b2 and b % block_b == 0 and cc % block_c == 0, \
         (b, b2, cc, block_b, block_c)
+
+    if not is_static_p(p):
+        assert p.shape == (b, 1), (p.shape, b)
+        return pl.pallas_call(
+            functools.partial(
+                _gather_lp_vec_kernel, root=root, n=n, block_c=block_c
+            ),
+            grid=(b // block_b, cc // block_c),
+            in_specs=[
+                pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+                pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),  # X stays in HBM
+            ],
+            out_specs=pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((b, cc), out_dtype),
+            scratch_shapes=[
+                pltpu.VMEM((block_c, d), jnp.float32),
+                pltpu.SemaphoreType.DMA,
+            ],
+            interpret=interpret,
+        )(ids, q, p, x)
 
     return pl.pallas_call(
         functools.partial(

@@ -11,7 +11,12 @@ Responsibilities:
     runs the fused gather+distance kernel (rows gathered tile-by-tile in
     VMEM, no (B, C, d) HBM intermediate); off-TPU it falls back to the
     plain jnp reference, which XLA:CPU handles better than an interpreted
-    per-row DMA loop.
+    per-row DMA loop;
+  * scalar-vs-vector p (DESIGN.md §6): every wrapper takes p as a Python
+    float (compile-time per-p specialization) or a (B,) array (one traced
+    program serves a mixed-p batch, each row bit-identical to its scalar
+    specialization). Scalar p stays on the original static-argname jits,
+    so existing per-p callers compile exactly as before.
 """
 
 from __future__ import annotations
@@ -21,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.lp_ops import lp_root
+from repro.core.lp_ops import is_static_p, lp_root
 from repro.core.metrics import rowwise_lp
 from repro.kernels import lp_distance as _k
 
@@ -71,10 +76,20 @@ def _pad_axis(a: jax.Array, axis: int, to: int, fill: float) -> jax.Array:
     return jnp.pad(a, widths, constant_values=fill)
 
 
+def _pad_p_col(p: jax.Array, to: int) -> jax.Array:
+    """(B,) per-row p -> pre-padded (to, 1) f32 kernel operand.
+
+    Padding rows get p=1.0 — the cheapest family; their outputs are sliced
+    off, so any valid p would do.
+    """
+    p = jnp.asarray(p, dtype=jnp.float32).reshape(-1)
+    return _pad_axis(p, 0, to, 1.0)[:, None]
+
+
 @functools.partial(
     jax.jit, static_argnames=("p", "root", "interpret", "block_b", "block_n")
 )
-def pallas_pairwise_lp(
+def _pallas_pairwise_lp_s(
     q: jax.Array,
     x: jax.Array,
     p: float,
@@ -83,7 +98,6 @@ def pallas_pairwise_lp(
     block_b: int | None = None,
     block_n: int | None = None,
 ) -> jax.Array:
-    """Pairwise Lp distances (B, d) x (N, d) -> (B, N) via the Pallas kernel."""
     if interpret is None:
         interpret = not _on_tpu()
     b, d = q.shape
@@ -96,16 +110,74 @@ def pallas_pairwise_lp(
     bp, np_ = _round_up(b, tb), _round_up(n, tn)
     qp = _pad_axis(q, 0, bp, 0.0)
     xp = _pad_axis(x, 0, np_, 0.0)
+    # root applied *outside* the kernel (like the gather entry point): the
+    # in-kernel static-p root const-folds its division while a traced-p
+    # kernel divides at runtime — rooting on the (B, N) result with the
+    # barriered lp_root keeps static-p and vector-p wrappers bit-consistent.
     out = _k.pairwise_lp_kernel_call(
-        qp, xp, p, root=root, block_b=tb, block_n=tn, interpret=interpret
-    )
-    return out[:b, :n]
+        qp, xp, p, root=False, block_b=tb, block_n=tn, interpret=interpret
+    )[:b, :n]
+    return lp_root(out, p) if root else out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("root", "interpret", "block_b", "block_n")
+)
+def _pallas_pairwise_lp_v(
+    q: jax.Array,
+    x: jax.Array,
+    p: jax.Array,
+    root: bool = True,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_n: int | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, d = q.shape
+    p = jnp.broadcast_to(p, (b,))  # (1,) = "one p for every row"
+    n, _ = x.shape
+    tb, tn = _pick_tiles_pairwise(b, n, d)
+    if block_b is not None:
+        tb = block_b
+    if block_n is not None:
+        tn = block_n
+    bp, np_ = _round_up(b, tb), _round_up(n, tn)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    xp = _pad_axis(x, 0, np_, 0.0)
+    out = _k.pairwise_lp_kernel_call(
+        qp, xp, _pad_p_col(p, bp), root=False, block_b=tb, block_n=tn,
+        interpret=interpret,
+    )[:b, :n]
+    return lp_root(out, p[:, None]) if root else out
+
+
+def pallas_pairwise_lp(
+    q: jax.Array,
+    x: jax.Array,
+    p,
+    root: bool = True,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Pairwise Lp distances (B, d) x (N, d) -> (B, N) via the Pallas kernel.
+
+    p: Python float (per-p compiled program) or a (B,) array scoring each
+    query row under its own metric (one compiled program for any p mix —
+    DESIGN.md §6).
+    """
+    if is_static_p(p):
+        return _pallas_pairwise_lp_s(q, x, float(p), root, interpret,
+                                     block_b, block_n)
+    return _pallas_pairwise_lp_v(q, x, jnp.atleast_1d(
+        jnp.asarray(p, jnp.float32)), root, interpret, block_b, block_n)
 
 
 @functools.partial(
     jax.jit, static_argnames=("p", "root", "interpret", "block_b", "block_c")
 )
-def pallas_rowwise_lp(
+def _pallas_rowwise_lp_s(
     q: jax.Array,
     c: jax.Array,
     p: float,
@@ -114,7 +186,6 @@ def pallas_rowwise_lp(
     block_b: int | None = None,
     block_c: int | None = None,
 ) -> jax.Array:
-    """Rowwise Lp distances (B, d) x (B, C, d) -> (B, C) via the Pallas kernel."""
     if interpret is None:
         interpret = not _on_tpu()
     b, d = q.shape
@@ -127,10 +198,65 @@ def pallas_rowwise_lp(
     bp, cp = _round_up(b, tb), _round_up(cc, tc)
     qp = _pad_axis(q, 0, bp, 0.0)
     cpad = _pad_axis(_pad_axis(c, 1, cp, 0.0), 0, bp, 0.0)
+    # root outside the kernel — see _pallas_pairwise_lp_s for why
     out = _k.rowwise_lp_kernel_call(
-        qp, cpad, p, root=root, block_b=tb, block_c=tc, interpret=interpret
-    )
-    return out[:b, :cc]
+        qp, cpad, p, root=False, block_b=tb, block_c=tc, interpret=interpret
+    )[:b, :cc]
+    return lp_root(out, p) if root else out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("root", "interpret", "block_b", "block_c")
+)
+def _pallas_rowwise_lp_v(
+    q: jax.Array,
+    c: jax.Array,
+    p: jax.Array,
+    root: bool = True,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, d = q.shape
+    p = jnp.broadcast_to(p, (b,))  # (1,) = "one p for every row"
+    _, cc, _ = c.shape
+    tb, tc = _pick_tiles_rowwise(b, cc, d)
+    if block_b is not None:
+        tb = block_b
+    if block_c is not None:
+        tc = block_c
+    bp, cp = _round_up(b, tb), _round_up(cc, tc)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    cpad = _pad_axis(_pad_axis(c, 1, cp, 0.0), 0, bp, 0.0)
+    out = _k.rowwise_lp_kernel_call(
+        qp, cpad, _pad_p_col(p, bp), root=False, block_b=tb, block_c=tc,
+        interpret=interpret,
+    )[:b, :cc]
+    return lp_root(out, p[:, None]) if root else out
+
+
+def pallas_rowwise_lp(
+    q: jax.Array,
+    c: jax.Array,
+    p,
+    root: bool = True,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+) -> jax.Array:
+    """Rowwise Lp distances (B, d) x (B, C, d) -> (B, C) via the Pallas kernel.
+
+    p: Python float (per-p compiled program) or a (B,) array scoring each
+    query row under its own metric (one compiled program for any p mix —
+    DESIGN.md §6).
+    """
+    if is_static_p(p):
+        return _pallas_rowwise_lp_s(q, c, float(p), root, interpret,
+                                    block_b, block_c)
+    return _pallas_rowwise_lp_v(q, c, jnp.atleast_1d(
+        jnp.asarray(p, jnp.float32)), root, interpret, block_b, block_c)
 
 
 def _pick_tiles_gather(b: int, c: int, d: int) -> tuple[int, int]:
@@ -156,34 +282,16 @@ def _pick_tiles_gather(b: int, c: int, d: int) -> tuple[int, int]:
 @functools.partial(
     jax.jit, static_argnames=("p", "root", "interpret", "block_b", "block_c")
 )
-def lp_gather_distance(
-    q: jax.Array,    # (B, d) queries
-    ids: jax.Array,  # (B, C) int32 candidate ids; anything outside [0, n) is
-                     # padding (-1 from merges, n from beam sentinels)
-    x: jax.Array,    # (n, d) dataset
+def _lp_gather_distance_s(
+    q: jax.Array,
+    ids: jax.Array,
+    x: jax.Array,
     p: float,
     root: bool = False,
     interpret: bool | None = None,
     block_b: int | None = None,
     block_c: int | None = None,
 ) -> jax.Array:
-    """Exact-Lp distances for per-query candidate id blocks -> (B, C).
-
-    THE dispatch entry point for all exact-Lp scoring in the query path
-    (DESIGN.md §2 "hot path"). Padding ids score +inf so they can never
-    enter a result set. `interpret`:
-
-      * None (default) — backend-aware: fused Pallas kernel on TPU, jnp
-        reference (gather + rowwise powers) elsewhere;
-      * True  — force the Pallas kernel in interpret mode (kernel-parity
-        tests on CPU);
-      * False — force the compiled Pallas kernel.
-
-    ids may also be 1-D (C,): "every query scores the same candidate
-    rows" (the delta-scan shape). That routes to the pairwise kernel on a
-    once-gathered (C, d) block — no per-query re-gather, and p=2 keeps
-    its MXU matmul — instead of broadcasting the id row B times.
-    """
     n = x.shape[0]
     if ids.ndim == 1:
         valid = (ids >= 0) & (ids < n)
@@ -219,3 +327,99 @@ def lp_gather_distance(
         ip, qp, x, p, root=False, block_b=tb, block_c=tc, interpret=interpret
     )[:b, :cc]
     return lp_root(out, p) if root else out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("root", "interpret", "block_b", "block_c")
+)
+def _lp_gather_distance_v(
+    q: jax.Array,
+    ids: jax.Array,
+    x: jax.Array,
+    p: jax.Array,    # (B,) per-query metric
+    root: bool = False,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+) -> jax.Array:
+    n = x.shape[0]
+    p = jnp.broadcast_to(p, (q.shape[0],))  # (1,) = "one p for every row"
+    if ids.ndim == 1:
+        valid = (ids >= 0) & (ids < n)
+        xs = x[jnp.clip(ids, 0, n - 1)]  # gathered once, shared by all rows
+        d = pallas_pairwise_lp(q, xs, p, root=False, interpret=interpret)
+        d = jnp.where(valid[None, :], d, jnp.inf)
+        return lp_root(d, p[:, None]) if root else d
+    if interpret is None and not _on_tpu():
+        valid = (ids >= 0) & (ids < n)
+        d = rowwise_lp(q, x[jnp.clip(ids, 0, n - 1)], p, root=False)
+        d = jnp.where(valid, d, jnp.inf)
+        return lp_root(d, p[:, None]) if root else d
+    if interpret is None:
+        interpret = False
+    b, d = q.shape
+    _, cc = ids.shape
+    tb, tc = _pick_tiles_gather(b, cc, d)
+    if block_b is not None:
+        tb = block_b
+    if block_c is not None:
+        tc = block_c
+    bp, cp = _round_up(b, tb), _round_up(cc, tc)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    ip = jnp.pad(
+        ids.astype(jnp.int32),
+        ((0, bp - b), (0, cp - cc)),
+        constant_values=-1,
+    )
+    out = _k.gather_lp_kernel_call(
+        ip, qp, x, _pad_p_col(p, bp), root=False, block_b=tb, block_c=tc,
+        interpret=interpret,
+    )[:b, :cc]
+    return lp_root(out, p[:, None]) if root else out
+
+
+def lp_gather_distance(
+    q: jax.Array,    # (B, d) f32 queries
+    ids: jax.Array,  # (B, C) int32 candidate ids; anything outside [0, n) is
+                     # padding (-1 from merges, n from beam sentinels)
+    x: jax.Array,    # (n, d) f32 dataset
+    p,
+    root: bool = False,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+) -> jax.Array:
+    """Exact-Lp distances for per-query candidate id blocks -> (B, C) f32.
+
+    THE dispatch entry point for all exact-Lp scoring in the query path
+    (DESIGN.md §2 "hot path"). Padding ids score +inf so they can never
+    enter a result set.
+
+    `p` — the scalar-vs-vector contract (DESIGN.md §6):
+
+      * Python float — one compiled program per distinct p (the classic
+        grouped-serving path);
+      * (B,) array (f32) — row i is scored under p[i]; ONE compiled
+        program serves any mix of p values, and each row's result is
+        bit-identical to the scalar-p call with p = p[i] on the same path
+        (the per-row op-sequence selection in core/lp_ops guarantees it).
+
+    `interpret`:
+
+      * None (default) — backend-aware: fused Pallas kernel on TPU, jnp
+        reference (gather + rowwise powers) elsewhere;
+      * True  — force the Pallas kernel in interpret mode (kernel-parity
+        tests on CPU);
+      * False — force the compiled Pallas kernel.
+
+    ids may also be 1-D (C,): "every query scores the same candidate
+    rows" (the delta-scan shape). That routes to the pairwise kernel on a
+    once-gathered (C, d) block — no per-query re-gather, and p=2 keeps
+    its MXU matmul — instead of broadcasting the id row B times.
+    """
+    if is_static_p(p):
+        return _lp_gather_distance_s(q, ids, x, float(p), root, interpret,
+                                     block_b, block_c)
+    return _lp_gather_distance_v(
+        q, ids, x, jnp.atleast_1d(jnp.asarray(p, jnp.float32)),
+        root, interpret, block_b, block_c)

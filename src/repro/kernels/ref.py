@@ -2,6 +2,9 @@
 
 The single source of truth for Lp semantics is repro.core.metrics; the
 kernels must match these to float tolerance across all shapes/dtypes/p.
+Like the kernels, the oracles accept p as a Python float or as a (B,)
+per-query-row array (the mixed-p contract, DESIGN.md §6) — so every
+vector-p kernel has a vector-p oracle with identical semantics.
 """
 
 from repro.core.metrics import (  # noqa: F401

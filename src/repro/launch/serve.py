@@ -6,7 +6,7 @@
 
 On real hardware the same engine runs under launch/mesh.py's production
 meshes with the decode cache sequence-sharded over 'model' and (for MoE
-archs) the weights-stationary decode MoE (§Perf).
+archs) the weights-stationary decode MoE (DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -67,10 +67,19 @@ def serve_retrieval(args) -> int:
     t0 = time.time()
     out = service.serve(reqs)
     dt = time.time() - t0
+    st = service.stats
+    lat = service.latency_summary()
     print(f"served {len(out)} mixed-p requests in {dt:.1f}s "
-          f"({len(out) / dt:.0f} qps); "
-          f"avg N_b={service.stats['n_b'] / len(reqs):.0f} "
-          f"N_p={service.stats['n_p'] / len(reqs):.0f}")
+          f"({len(out) / dt:.0f} qps, {st['batches']} padded buckets, "
+          f"queue peak {st['queue_peak']}); "
+          f"avg N_b={st['n_b'] / len(reqs):.0f} "
+          f"N_p={st['n_p'] / len(reqs):.0f}; "
+          f"latency p50={lat['p50']:.0f}ms p95={lat['p95']:.0f}ms")
+    for name, pb in st["per_base"].items():
+        if pb["queries"]:
+            print(f"  {name}: {pb['queries']} queries / {pb['batches']} "
+                  f"batches, avg N_b={pb['n_b'] / pb['queries']:.0f} "
+                  f"N_p={pb['n_p'] / pb['queries']:.0f}")
     return 0
 
 

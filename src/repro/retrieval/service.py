@@ -1,26 +1,50 @@
-"""Universal vector-search service: the paper's engine as a serving feature.
+"""Universal vector-search service: mixed-p micro-batching scheduler.
 
-Wraps an index behind a request API where *every request carries its own p*
-(the ANNS-U-Lp contract). Mixed-p request streams are grouped by p into
-sub-batches (the per-p jit cache makes each group a single device program);
-the index is a ShardedUHNSW by default — its stacked segment axis shards
-over the ('pod','data') mesh axes (`ShardedUHNSW.shard_over`) and its delta
-tier accepts online inserts, so the service supports a full
+The ANNS-U-Lp contract is that *every request carries its own p* (paper
+§1: the optimal metric is task-specific). The naive way to serve that —
+group the stream by exact (p, k) and run one device call per group — runs
+tiny, data-dependently-shaped batches and compiles one program per
+distinct p, which collapses under realistic traffic with many distinct p
+values. This scheduler instead threads p through the kernel stack as a
+*per-query tensor* (DESIGN.md §6):
+
+  * bounded FIFO request queue (`queue_capacity`; `submit` raises
+    `QueueFull` rather than buffering unboundedly);
+  * two-way partition by base graph (G1 for p <= cutoff, G2 otherwise) ×
+    k — never one group per distinct p;
+  * padded power-of-two batch buckets (`min_bucket` … `max_batch`): every
+    device call has one of a fixed set of shapes, so the jit cache holds
+    two compiled entry points (one per base graph) per bucket size × k,
+    independent of how many distinct p values the stream contains;
+  * per-request latency, queue-depth, and per-base-graph / per-p-bucket
+    N_b / N_p stats, so benchmark results are attributable (`stats`,
+    `latency_summary`).
+
+Results are bit-identical to per-p grouped serving (`serve_grouped`, kept
+as the measurement baseline): the vector-p kernels select each row's
+scalar op sequence exactly (repro.core.lp_ops).
+
+The index is a ShardedUHNSW by default — its stacked segment axis shards
+over the ('pod','data') mesh axes (`ShardedUHNSW.shard_over`) and its
+delta tier accepts online inserts, so the service supports a full
 read/write mixed-metric workload (DESIGN.md §3).
-
-This is the deployment surface the paper motivates (§1: per-application /
-per-task optimal p) — e.g. a multi-tenant retrieval tier where each tenant
-tuned its own metric.
 """
 
 from __future__ import annotations
 
+import time
+from collections import deque
 from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from repro.core.metrics import base_metric_for
 from repro.core.uhnsw import UHNSW, UHNSWParams
 from repro.index.sharded import ShardedUHNSW
+
+
+class QueueFull(RuntimeError):
+    """Raised by `submit` when the bounded request queue is at capacity."""
 
 
 def _with_expand_width(params: UHNSWParams | None,
@@ -33,6 +57,9 @@ def _with_expand_width(params: UHNSWParams | None,
 
 @dataclass
 class QueryRequest:
+    """One ANNS-U-Lp query: a (d,) vector, its own metric p ∈ [0.5, 2],
+    result size k, and a caller-chosen id the response is keyed by."""
+
     vector: np.ndarray
     p: float
     k: int = 10
@@ -45,25 +72,78 @@ class InsertRequest:
     request_id: int = 0
 
 
+def _empty_stats() -> dict:
+    return {
+        "queries": 0, "batches": 0, "inserts": 0, "compactions": 0,
+        "n_b": 0.0, "n_p": 0.0,      # aggregate Eq. 1 counters
+        "padded_rows": 0,            # bucket-padding rows executed
+        "queue_peak": 0,             # high-water queue depth
+        # attribution (the ISSUE's stats fix): one bucket per base graph
+        # and one per distinct requested p, each with its own Eq. 1 split
+        "per_base": {
+            "G1": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0},
+            "G2": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0},
+        },
+        "per_p": {},                 # "%g" % p -> {queries, n_b, n_p}
+        # per-request submit->response latency; bounded so a long-running
+        # service cannot grow it without limit (latency_summary reports
+        # over the most recent window)
+        "latency_ms": deque(maxlen=10_000),
+    }
+
+
 @dataclass
 class UniversalVectorService:
+    """Mixed-p batched serving engine over a U-HNSW index.
+
+    Public surface:
+      * `build(data, ...)` / `build_monolithic(data, ...)` — construct the
+        backing index (segmented+delta ShardedUHNSW, or the paper-exact
+        monolithic UHNSW).
+      * `submit(requests)` + `drain()` — enqueue into the bounded queue,
+        then serve everything queued in padded mixed-p buckets.
+      * `serve(requests)` — submit+drain convenience wrapper; returns
+        {request_id: (ids (k,) int32, rooted dists (k,) f32)}.
+      * `serve_grouped(requests)` — the legacy per-(p, k) grouped path,
+        kept as the benchmark baseline; bit-identical results.
+      * `insert(requests)` — streaming inserts into the delta tier.
+      * `stats` / `latency_summary()` — scheduler + Eq. 1 accounting.
+
+    Scheduling parameters: `max_batch` caps device batch size,
+    `min_bucket` is the smallest padded bucket (buckets are the
+    power-of-two ladder min_bucket … max_batch), `queue_capacity` bounds
+    the request queue (DESIGN.md §6). `max_verify_batch` caps buckets
+    that need the verification pass: the convergence while_loop runs
+    until the slowest row in the bucket terminates, so smaller verify
+    buckets bound that gating cost (measured sweet spot ~32 on CPU);
+    exact-base buckets have no such loop and use the full max_batch.
+    """
+
     index: ShardedUHNSW | UHNSW
     max_batch: int = 256
-    stats: dict = field(default_factory=lambda: {
-        "queries": 0, "batches": 0, "inserts": 0, "compactions": 0,
-        "n_b": 0.0, "n_p": 0.0,
-    })
+    max_verify_batch: int = 32
+    min_bucket: int = 8
+    queue_capacity: int = 4096
+    stats: dict = field(default_factory=_empty_stats)
+
+    def __post_init__(self):
+        assert self.min_bucket >= 1 and self.max_batch >= self.min_bucket
+        self._queue: deque = deque()  # (QueryRequest, enqueue_time)
+
+    # -- construction -------------------------------------------------------
 
     @classmethod
     def build(cls, data: np.ndarray, params: UHNSWParams | None = None,
               m: int = 32, num_segments: int = 4, seed: int = 0,
               delta_capacity: int = 1024, rt=None,
               expand_width: int | None = None, **kw):
-        """Build a segmented sharded index over `data`.
+        """Build a segmented sharded index over `data` (n, d) f32.
 
         With rt (a repro.dist Runtime), the segment axis is placed over the
         mesh's data axes. expand_width (if given) overrides the params'
-        W-way multi-expansion factor for the level-0 beam.
+        W-way multi-expansion factor for the level-0 beam. Remaining
+        kwargs configure the service (max_batch, min_bucket,
+        queue_capacity).
         """
         index = ShardedUHNSW.build(
             data, num_segments=num_segments, m=m,
@@ -88,6 +168,8 @@ class UniversalVectorService:
         params = _with_expand_width(params, expand_width)
         return cls(index=UHNSW(g1, g2, params), **kw)
 
+    # -- writes -------------------------------------------------------------
+
     def insert(self, requests: list[InsertRequest]) -> dict[int, int]:
         """Streaming inserts (ShardedUHNSW only). request_id -> global id."""
         if not hasattr(self.index, "add"):
@@ -101,23 +183,215 @@ class UniversalVectorService:
         self.stats["compactions"] += self.index.num_segments - segs_before
         return out
 
+    # -- the micro-batching scheduler ---------------------------------------
+
+    def submit(self, requests: list[QueryRequest]) -> None:
+        """Enqueue requests into the bounded FIFO queue.
+
+        Raises QueueFull if the batch would exceed `queue_capacity` (no
+        partial enqueue), ValueError for a p outside the universal range
+        or a vector of the wrong dimensionality — all *before* any request
+        of the batch is accepted, so a malformed request can never reach
+        (and abort) a device batch it shares with healthy ones.
+        """
+        if len(self._queue) + len(requests) > self.queue_capacity:
+            raise QueueFull(
+                f"queue at {len(self._queue)}/{self.queue_capacity}; "
+                f"cannot accept {len(requests)} more"
+            )
+        dim = int(self.index.X.shape[1])
+        for r in requests:
+            base_metric_for(float(r.p))  # range-validates p (NaN included)
+            v = np.asarray(r.vector)
+            if v.size != dim:
+                raise ValueError(
+                    f"request {r.request_id}: vector has {v.size} elements, "
+                    f"index dimension is {dim}"
+                )
+        now = time.perf_counter()
+        for r in requests:
+            self._queue.append((r, now))
+        self.stats["queue_peak"] = max(self.stats["queue_peak"],
+                                       len(self._queue))
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def drain(self) -> dict[int, tuple]:
+        """Serve everything queued. Returns request_id -> (ids, dists).
+
+        Scheduling (DESIGN.md §6): the queued requests partition two ways
+        by base graph (cutoff rule), then by k; each partition is cut into
+        FIFO chunks of <= max_batch and every chunk is padded up to the
+        next power-of-two bucket size, so each device call has one of a
+        fixed set of shapes regardless of how many distinct p values are
+        in flight. Padding rows replicate the chunk's first request and
+        are sliced off before stats are counted.
+        """
+        cutoff = self.index.params.cutoff
+        out: dict[int, tuple] = {}
+        # two-way base partition × k — insertion order stays FIFO per group.
+        # Rows whose p IS a base metric (exactly 1 or 2) never need
+        # verification (paper §3 preamble); they bucket separately and take
+        # the scalar skip path — the mixed engine's fast lane for the most
+        # common production metrics.
+        groups: dict[tuple[float, int, bool], list] = {}
+        while self._queue:
+            r, t0 = self._queue.popleft()
+            base = base_metric_for(float(r.p), cutoff)
+            exact = float(r.p) == base
+            groups.setdefault((base, int(r.k), exact), []).append((r, t0))
+        buckets = []
+        for (base, k, exact), entries in sorted(groups.items()):
+            cap = self.max_batch if exact else min(self.max_verify_batch,
+                                                   self.max_batch)
+            for start in range(0, len(entries), cap):
+                buckets.append((base, k, exact, entries[start:start + cap],
+                                cap))
+        for i, (base, k, exact, chunk, cap) in enumerate(buckets):
+            try:
+                self._run_bucket(base, k, exact, chunk, out, cap)
+            except Exception as e:
+                # a failing bucket must not lose the rest of the drained
+                # queue: re-enqueue every unserved request (including the
+                # failing bucket's) so the caller can inspect or retry,
+                # and hand back the responses already computed this call —
+                # those requests are NOT re-enqueued (their stats are
+                # already counted), so the partial dict is their only copy.
+                for _, _, _, ch, _ in buckets[i:]:
+                    self._queue.extend(ch)
+                if not hasattr(e, "partial_results"):
+                    e.partial_results = out
+                raise
+        return out
+
+    def _bucket_size(self, n: int, cap: int) -> int:
+        """Smallest power-of-two ladder size >= n (min_bucket … cap)."""
+        size = self.min_bucket
+        while size < n and size < cap:
+            size *= 2
+        return min(size, cap)
+
+    def _run_bucket(self, base: float, k: int, exact: bool, chunk: list,
+                    out: dict[int, tuple], cap: int) -> None:
+        """One padded fixed-shape device call for a homogeneous-base chunk.
+
+        exact=True means every row's p equals the base metric — the call
+        drops to the scalar skip path (no verification program at all).
+        """
+        n_real = len(chunk)
+        size = self._bucket_size(n_real, cap)
+        reqs = [r for r, _ in chunk]
+        q = np.stack([np.asarray(r.vector, np.float32).reshape(-1)
+                      for r in reqs])
+        if size > n_real:  # pad by replicating row 0 (same base, any p ok)
+            q = np.concatenate([q, np.repeat(q[:1], size - n_real, axis=0)])
+        if exact:
+            ids, dists, stats = self.index.search(q, base, k)
+        else:
+            p = np.array([float(r.p) for r in reqs], np.float32)
+            if size > n_real:
+                p = np.concatenate([p, np.repeat(p[:1], size - n_real)])
+            ids, dists, stats = self.index.search(q, p, k)
+        ids = np.asarray(ids)[:n_real]
+        dists = np.asarray(dists)[:n_real]
+        n_b = np.asarray(stats.n_b, dtype=np.float64)[:n_real]
+        n_p = np.asarray(stats.n_p, dtype=np.float64)[:n_real]
+        done = time.perf_counter()
+        st = self.stats
+        st["queries"] += n_real
+        st["batches"] += 1
+        st["padded_rows"] += size - n_real
+        st["n_b"] += float(n_b.sum())
+        st["n_p"] += float(n_p.sum())
+        pb = st["per_base"]["G1" if base == 1.0 else "G2"]
+        pb["queries"] += n_real
+        pb["batches"] += 1
+        pb["n_b"] += float(n_b.sum())
+        pb["n_p"] += float(n_p.sum())
+        for i, (r, t0) in enumerate(chunk):
+            out[r.request_id] = (ids[i], dists[i])
+            pp = st["per_p"].setdefault(
+                "%g" % float(r.p), {"queries": 0, "n_b": 0.0, "n_p": 0.0})
+            pp["queries"] += 1
+            pp["n_b"] += float(n_b[i])
+            pp["n_p"] += float(n_p[i])
+            st["latency_ms"].append((done - t0) * 1e3)
+
     def serve(self, requests: list[QueryRequest]) -> dict[int, tuple]:
-        """Serve a mixed-p request list. Returns request_id -> (ids, dists)."""
-        # group by (p, k): each group is one batched device call
+        """Serve a mixed-p request list: submit + drain, in waves sized to
+        the queue's *remaining* capacity, so arbitrarily long lists never
+        trip the bound — even when other requests were already queued via
+        `submit` (those are served too, FIFO, and their responses are
+        included in the returned dict, as with any `drain`). Returns
+        request_id -> (ids (k,) int32, rooted dists (k,) f32). If a wave
+        fails (bad request, device error), responses already computed ride
+        on the exception as `partial_results`."""
+        out: dict[int, tuple] = {}
+        i = 0
+        try:
+            while i < len(requests) or self._queue:
+                room = self.queue_capacity - len(self._queue)
+                if room > 0 and i < len(requests):
+                    wave = requests[i:i + room]
+                    self.submit(wave)
+                    i += len(wave)
+                out.update(self.drain())
+        except Exception as e:
+            out.update(getattr(e, "partial_results", {}))
+            e.partial_results = out
+            raise
+        return out
+
+    # -- the grouped baseline ------------------------------------------------
+
+    def serve_grouped(self, requests: list[QueryRequest]) -> dict[int, tuple]:
+        """Legacy per-(p, k) grouped serving: one device call per exact
+        (p, k) group with data-dependent batch shapes — the scheduling this
+        PR's micro-batcher replaces. Kept as the benchmark baseline
+        (benchmarks/serving.py) and the parity oracle.
+
+        Each group runs through the same traced-p kernel programs `serve`
+        uses (a constant p vector), so grouped-vs-mixed is a pure
+        *scheduling* comparison and results are bit-identical to `serve`
+        by construction — per-row kernel results are independent of batch
+        composition (tests/test_mixed_p.py pins this). Does not touch the
+        scheduler stats."""
         groups: dict[tuple[float, int], list[QueryRequest]] = {}
         for r in requests:
             groups.setdefault((float(r.p), int(r.k)), []).append(r)
         out: dict[int, tuple] = {}
+        cutoff = self.index.params.cutoff
         for (p, k), reqs in sorted(groups.items()):
             for start in range(0, len(reqs), self.max_batch):
-                chunk = reqs[start : start + self.max_batch]
+                chunk = reqs[start:start + self.max_batch]
                 q = np.stack([r.vector for r in chunk]).astype(np.float32)
-                ids, dists, stats = self.index.search(q, p, k)
+                if p == base_metric_for(p, cutoff):
+                    # base-metric group: the scalar skip path (no verify) —
+                    # the same program family the mixed exact lane uses
+                    ids, dists, _ = self.index.search(q, p, k)
+                else:
+                    p_vec = np.full(len(chunk), p, dtype=np.float32)
+                    ids, dists, _ = self.index.search(q, p_vec, k)
                 ids, dists = np.asarray(ids), np.asarray(dists)
                 for i, r in enumerate(chunk):
                     out[r.request_id] = (ids[i], dists[i])
-                self.stats["queries"] += len(chunk)
-                self.stats["batches"] += 1
-                self.stats["n_b"] += float(np.asarray(stats.n_b).sum())
-                self.stats["n_p"] += float(np.asarray(stats.n_p).sum())
         return out
+
+    # -- stats ---------------------------------------------------------------
+
+    def latency_summary(self) -> dict:
+        """Mean / p50 / p95 / max request latency (ms) over the most recent
+        window (the backing buffer keeps the last 10k requests)."""
+        lat = np.asarray(self.stats["latency_ms"], dtype=np.float64)
+        if lat.size == 0:
+            return {"count": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
+                    "max": 0.0}
+        return {
+            "count": int(lat.size),
+            "mean": float(lat.mean()),
+            "p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+            "max": float(lat.max()),
+        }

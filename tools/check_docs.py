@@ -1,0 +1,127 @@
+"""Docs consistency checker (the CI docs lane runs this).
+
+Checks, exiting non-zero with a findings list on any failure:
+
+  1. Markdown links in README.md / DESIGN.md that point at local files
+     resolve (and their #anchors, if any, match a heading's GitHub slug
+     in the target file).
+  2. Every `DESIGN.md §X` / `DESIGN §X` citation — in README.md,
+     DESIGN.md, and every .py docstring/comment under src/, examples/,
+     benchmarks/, tests/ — names a section heading that actually exists
+     in DESIGN.md.
+  3. Bare `§X` references inside DESIGN.md itself (which refer to its
+     own sections) resolve too; references prefixed with "paper" (the
+     source paper's numbering) are exempt.
+
+Usage:  python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = [ROOT / "README.md", ROOT / "DESIGN.md"]
+PY_DIRS = ["src", "examples", "benchmarks", "tests", "tools"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# meta-references to "a section number", not to a concrete section
+PLACEHOLDER_TOKENS = {"N", "X"}
+DESIGN_REF_RE = re.compile(r"DESIGN(?:\.md)?\s+§([0-9][0-9.]*|[A-Za-z][\w-]*)")
+BARE_REF_RE = re.compile(r"§([0-9][0-9.]*|[A-Za-z][\w-]*)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$", re.M)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip punctuation, spaces -> dashes."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def design_sections(design_text: str) -> set[str]:
+    """§-tokens defined by DESIGN.md headings, with numeric prefixes.
+
+    '## §2 Batched SPMD…' defines '2'; '### §2.1 …' defines '2.1';
+    '## §Paper-fidelity deviations' defines 'Paper-fidelity'.
+    """
+    tokens = set()
+    for _, title in HEADING_RE.findall(design_text):
+        m = re.match(r"§([0-9][0-9.]*|[A-Za-z][\w-]*)", title.strip())
+        if m:
+            tokens.add(m.group(1).rstrip("."))
+    return tokens
+
+
+def check() -> list[str]:
+    errors: list[str] = []
+    design_text = (ROOT / "DESIGN.md").read_text()
+    sections = design_sections(design_text)
+    if not sections:
+        return ["DESIGN.md defines no §-sections at all?"]
+
+    # 1. markdown links
+    for doc in DOCS:
+        text = doc.read_text()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            tgt = (doc.parent / path_part) if path_part else doc
+            if not tgt.exists():
+                errors.append(f"{doc.name}: broken link -> {target}")
+                continue
+            if anchor and tgt.suffix == ".md":
+                slugs = {github_slug(t) for _, t in
+                         HEADING_RE.findall(tgt.read_text())}
+                if anchor not in slugs:
+                    errors.append(
+                        f"{doc.name}: anchor #{anchor} not found in "
+                        f"{tgt.name}")
+
+    # 2. DESIGN.md §X citations across docs and code
+    files = list(DOCS)
+    for d in PY_DIRS:
+        files += sorted((ROOT / d).rglob("*.py"))
+    for f in files:
+        text = f.read_text()
+        for tok in DESIGN_REF_RE.findall(text):
+            if tok.rstrip(".") in PLACEHOLDER_TOKENS:
+                continue
+            if tok.rstrip(".") not in sections:
+                errors.append(
+                    f"{f.relative_to(ROOT)}: cites DESIGN.md §{tok}, "
+                    f"which is not a DESIGN.md section "
+                    f"(have: {sorted(sections)})")
+
+    # 3. bare §X self-references inside DESIGN.md ("paper §X" exempt)
+    for m in BARE_REF_RE.finditer(design_text):
+        prefix = design_text[max(0, m.start() - 24):m.start()].lower()
+        if "paper" in prefix.split("\n")[-1]:
+            continue
+        tok = m.group(1).rstrip(".")
+        if tok in PLACEHOLDER_TOKENS:
+            continue
+        if tok not in sections:
+            line = design_text.count("\n", 0, m.start()) + 1
+            errors.append(
+                f"DESIGN.md:{line}: §{m.group(1)} does not resolve to a "
+                f"DESIGN.md section (have: {sorted(sections)})")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("check_docs: all links and §-references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
