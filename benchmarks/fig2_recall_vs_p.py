@@ -7,7 +7,6 @@ base-index selection cutoff.
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import K_DEFAULT, emit, get_dataset, ground_truth
 

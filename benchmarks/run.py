@@ -43,6 +43,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (
         beam_width,
+        build,
         fig1_lp_distance_cost,
         fig2_recall_vs_p,
         fig3_param_tuning,
@@ -54,6 +55,7 @@ def main(argv=None) -> int:
     )
 
     benches = {
+        "build": build.run,
         "fig1": fig1_lp_distance_cost.run,
         "fig2": fig2_recall_vs_p.run,
         "fig3": fig3_param_tuning.run,
@@ -65,6 +67,13 @@ def main(argv=None) -> int:
         "serving": serving.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
+    unknown = only - set(benches)
+    if unknown:
+        # a typo must not silently run nothing and exit 0 (the bench-guard
+        # gate would then compare stale committed JSONs)
+        print(f"unknown benchmark name(s) {sorted(unknown)}; "
+              f"options: {sorted(benches)}")
+        return 2
     failures = []
     for name, fn in benches.items():
         if name not in only:

@@ -26,7 +26,6 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, get_dataset, get_uhnsw, ground_truth
-from repro.core.uhnsw import recall
 from repro.retrieval.service import QueryRequest, UniversalVectorService
 
 K = 10

@@ -11,7 +11,6 @@ here it runs on the local device mesh.
 
 import argparse
 
-from repro.configs.base import get_arch
 from repro.launch.train import main as train_main
 
 
@@ -35,8 +34,8 @@ def main():
             n_kv_heads=4, d_ff=2048, vocab_size=32_000,
         )
         # register it so --arch can find it
-        import repro.configs as configs_pkg
-        import sys, types
+        import sys
+        import types
 
         mod = types.ModuleType("repro.configs.llama_100m")
         mod.config = lambda: cfg100

@@ -25,12 +25,10 @@ import json
 import os
 import shutil
 import threading
-import time
 from pathlib import Path
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def _flatten(tree, prefix=""):

@@ -27,13 +27,11 @@ base-metric Q2D evaluations, Eq. 1) is counted exactly.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.build import HNSWGraph
 from repro.core.metrics import lp_distance
 
 
@@ -63,7 +61,16 @@ class GraphArrays:
         return cls(adj0, upper_adj, upper_g2l, entry, aux[0], aux[1])
 
     @classmethod
-    def from_graph(cls, g: HNSWGraph) -> "GraphArrays":
+    def from_graph(cls, g) -> "GraphArrays":
+        """Device topology for a built graph.
+
+        Accepts the host `HNSWGraph` (re-packs adjacency, -1 -> sentinel n)
+        or any graph exposing `graph_arrays()` — e.g. the bulk builder's
+        `DeviceGraph` (repro.core.bulk_build), whose topology is already
+        device-resident and is returned as-is.
+        """
+        if hasattr(g, "graph_arrays"):
+            return g.graph_arrays()
         n = g.n
 
         def pad(a):

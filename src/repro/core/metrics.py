@@ -16,7 +16,6 @@ the analytic TPU op-cost model used by benchmarks/fig1_lp_distance_cost.py.
 
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax

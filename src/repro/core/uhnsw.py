@@ -277,8 +277,9 @@ class UHNSW:
         dists (B, k) f32, SearchStats).
       * `base_graph_for(p)` — scalar-p base-graph pick; a mixed-p batch is
         instead *two-way partitioned* (G1 rows / G2 rows) inside `search`.
-      * `build(...)` — sequential paper-faithful construction; prefer
-        `build_hnsw_bulk` + the constructor at benchmark scale.
+      * `build(...)` — construction: method="incremental" (sequential,
+        paper-faithful) or method="bulk" (batched device-side shared-pass
+        builder, DESIGN.md §7 — the benchmark-scale default elsewhere).
 
     Supported p range is the paper's universal family [0.5, 2].
     """
@@ -302,7 +303,39 @@ class UHNSW:
         seed: int = 0,
         params: UHNSWParams | None = None,
         progress_every: int = 0,
+        method: str = "incremental",
     ) -> "UHNSW":
+        """Construct both base graphs and wrap them in a UHNSW.
+
+        method (DESIGN.md §7):
+          * "incremental" — paper-faithful sequential insertion (the
+            default; ef_construction applies).
+          * "bulk" — batched device-side shared-pass construction
+            (repro.core.bulk_build): G1 and G2 from ONE candidate-
+            generation pass, ~an order of magnitude faster at segment
+            scale; ef_construction is ignored (the bulk path has no
+            insertion beam).
+          * "bulk_host" — the vectorized NumPy per-graph bulk builder
+            (build_hnsw_bulk); ef_construction is ignored.
+        """
+        if method == "bulk":
+            from repro.core.bulk_build import build_bulk_pair
+
+            g1, g2 = build_bulk_pair(data, m=m, seed=seed,
+                                     progress_every=progress_every)
+            return cls(g1, g2, params)
+        if method == "bulk_host":
+            from repro.core.build import build_hnsw_bulk
+
+            g1 = build_hnsw_bulk(data, 1.0, m=m, seed=seed,
+                                 progress_every=progress_every)
+            g2 = build_hnsw_bulk(data, 2.0, m=m, seed=seed + 1,
+                                 progress_every=progress_every)
+            return cls(g1, g2, params)
+        if method != "incremental":
+            raise ValueError(
+                f"unknown build method {method!r} "
+                "(options: 'incremental', 'bulk', 'bulk_host')")
         g1 = build_hnsw(data, 1.0, m, ef_construction, seed, progress_every=progress_every)
         g2 = build_hnsw(data, 2.0, m, ef_construction, seed + 1, progress_every=progress_every)
         return cls(g1, g2, params)

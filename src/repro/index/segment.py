@@ -25,8 +25,14 @@ from repro.core.build import HNSWGraph, build_hnsw, build_hnsw_bulk
 from repro.core.hnsw import GraphArrays
 
 # below this size the sequential (faithful) builder is both faster to warm up
-# and higher quality; above it the vectorized bulk builder wins
+# and higher quality; above it the batched bulk builder wins
 BULK_THRESHOLD = 512
+
+# segment build methods (DESIGN.md §7): "bulk" is the device-side shared-pass
+# builder (G1+G2 from one candidate-generation pass), "bulk_host" the older
+# vectorized NumPy per-graph builder, "incremental" the paper-faithful
+# sequential insertion.
+BUILD_METHODS = ("incremental", "bulk", "bulk_host")
 
 
 def partition_dataset(n: int, num_segments: int, seed: int = 0) -> list[np.ndarray]:
@@ -38,13 +44,35 @@ def partition_dataset(n: int, num_segments: int, seed: int = 0) -> list[np.ndarr
             np.array_split(perm, num_segments)]
 
 
+def resolve_build_method(n: int, bulk: bool | None = None,
+                         method: str | None = None) -> str:
+    """Pick a segment build method.
+
+    `method` (one of BUILD_METHODS) wins when given; else the legacy `bulk`
+    flag maps True -> "bulk", False -> "incremental"; else auto by size
+    (incremental below BULK_THRESHOLD, device bulk above).
+    """
+    if method is not None:
+        if method not in BUILD_METHODS:
+            raise ValueError(
+                f"unknown build method {method!r} (options: {BUILD_METHODS})")
+        return method
+    if bulk is not None:
+        return "bulk" if bulk else "incremental"
+    return "bulk" if n >= BULK_THRESHOLD else "incremental"
+
+
 def build_segment_pair(
     data: np.ndarray, m: int, seed: int, bulk: bool | None = None,
-) -> tuple[HNSWGraph, HNSWGraph]:
+    method: str | None = None,
+):
     """Build one segment's (G1, G2) over `data` (local ids)."""
-    if bulk is None:
-        bulk = len(data) >= BULK_THRESHOLD
-    if bulk:
+    method = resolve_build_method(len(data), bulk=bulk, method=method)
+    if method == "bulk":
+        from repro.core.bulk_build import build_bulk_pair
+
+        return build_bulk_pair(data, m=m, seed=seed)
+    if method == "bulk_host":
         g1 = build_hnsw_bulk(data, 1.0, m=m, seed=seed)
         g2 = build_hnsw_bulk(data, 2.0, m=m, seed=seed + 1)
     else:
@@ -131,18 +159,23 @@ def build_segments(
     m: int = 16,
     seed: int = 0,
     bulk: bool | None = None,
+    method: str | None = None,
 ) -> SegmentedGraphs:
     """Partition `data` and build every segment's G1/G2 pair.
 
     Per-segment builds are independent (parallelizable across hosts at
     production scale — the sequential global insert order of monolithic HNSW
-    is the scaling bottleneck this removes).
+    is the scaling bottleneck this removes). `method` / `bulk` select the
+    per-segment builder (see `resolve_build_method`); the device bulk path
+    additionally builds each segment's G1 and G2 from one shared
+    candidate-generation pass (DESIGN.md §7).
     """
     data = np.ascontiguousarray(data, dtype=np.float32)
     parts = partition_dataset(len(data), num_segments, seed=seed)
     graphs1, graphs2, global_ids = [], [], []
     for i, ids in enumerate(parts):
-        g1, g2 = build_segment_pair(data[ids], m=m, seed=seed + 17 * i, bulk=bulk)
+        g1, g2 = build_segment_pair(data[ids], m=m, seed=seed + 17 * i,
+                                    bulk=bulk, method=method)
         graphs1.append(g1)
         graphs2.append(g2)
         global_ids.append(ids)

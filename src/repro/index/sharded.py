@@ -20,8 +20,10 @@ Query path (DESIGN.md §3):
      no verification is owed for delta hits.
 
 Streaming inserts: `add()` appends to the delta buffer; at capacity the
-buffer compacts into a new frozen segment (graphs build host-side, stacks
-re-pad) and the cycle repeats. Ids are assigned once and never change.
+buffer compacts into a new frozen segment — built with the index's build
+method (DESIGN.md §7; by default the batched bulk builder once the buffer
+holds >= BULK_THRESHOLD vectors), stacks re-pad — and the cycle repeats.
+Ids are assigned once and never change.
 """
 
 from __future__ import annotations
@@ -118,6 +120,7 @@ class ShardedUHNSW:
                                  capacity=delta_capacity)
         self._next_id = len(self._X_host)
         self._rt = None  # set by shard_over; re-applied after compaction
+        self._build_method = None  # compaction builder; None = auto by size
 
     # -- construction -------------------------------------------------------
 
@@ -131,11 +134,19 @@ class ShardedUHNSW:
         seed: int = 0,
         bulk: bool | None = None,
         delta_capacity: int = 1024,
+        method: str | None = None,
     ) -> "ShardedUHNSW":
+        """Partition + build. `method` selects the per-segment builder
+        ("incremental" / "bulk" / "bulk_host", DESIGN.md §7; None = auto by
+        segment size) and is remembered: delta compaction builds its frozen
+        segments with the same method."""
         segments = build_segments(data, num_segments=num_segments, m=m,
-                                  seed=seed, bulk=bulk)
-        return cls(segments, data, params=params,
-                   delta_capacity=delta_capacity)
+                                  seed=seed, bulk=bulk, method=method)
+        idx = cls(segments, data, params=params,
+                  delta_capacity=delta_capacity)
+        idx._build_method = method if method is not None else (
+            None if bulk is None else ("bulk" if bulk else "incremental"))
+        return idx
 
     @property
     def n(self) -> int:
@@ -329,7 +340,8 @@ class ShardedUHNSW:
         assert int(ids[0]) == len(self._X_host)  # ids stay row-aligned
         self._X_host = np.concatenate([self._X_host, vecs], axis=0)
         m = self.segments.graphs1[0].m
-        g1, g2 = build_segment_pair(vecs, m=m, seed=int(ids[0]) + 1)
+        g1, g2 = build_segment_pair(vecs, m=m, seed=int(ids[0]) + 1,
+                                    method=self._build_method)
         self.segments.append(g1, g2, ids)
         self.X = jnp.asarray(self._X_host)
         if self._rt is not None:  # restacking dropped the device placement

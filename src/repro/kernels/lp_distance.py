@@ -100,8 +100,10 @@ def _pairwise_vec_kernel(p_ref, q_ref, x_ref, o_ref, *, root: bool):
     the scalar `_pairwise_l2_kernel` emits, so p==2 rows are bit-identical
     to the scalar p=2 kernel. (The fast/slow VPU families match the scalar
     VPU kernel's op sequences exactly; XLA's fusion choices can still
-    reassociate the d-axis sum by 1 ulp on some tile shapes for p=1.5, so
-    only the gather/rowwise entry points — the serving hot path — carry
+    reassociate the d-axis sum by 1-2 ulp on non-lane-aligned tile shapes
+    for p=1.5 — pinned with an explicit ulp tolerance in
+    tests/test_kernels.py::test_pairwise_vector_p_vs_scalar_ulp_pinned —
+    so only the gather/rowwise entry points — the serving hot path — carry
     the hard bit-parity contract.)
     """
     q = q_ref[...].astype(jnp.float32)

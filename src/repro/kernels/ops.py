@@ -259,6 +259,31 @@ def pallas_rowwise_lp(
         jnp.asarray(p, jnp.float32)), root, interpret, block_b, block_c)
 
 
+def lp_pairwise_distance(
+    q: jax.Array,    # (B, d) f32
+    x: jax.Array,    # (N, d) f32
+    p,
+    root: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Backend-aware pairwise Lp dispatch -> (B, N) f32.
+
+    The all-pairs sibling of `lp_gather_distance` (same dispatch contract):
+    on TPU the tiled Pallas pairwise kernel, off-TPU the jnp reference —
+    which XLA:CPU compiles far better than an interpreted kernel body. Used
+    by the bulk graph builder's chunked scoring passes (DESIGN.md §7);
+    `interpret=True` forces the kernel in interpret mode for parity tests.
+
+    p follows the scalar-vs-vector contract (DESIGN.md §6): a Python float
+    or a (B,) array scoring each query row under its own metric.
+    """
+    if interpret is None and not _on_tpu():
+        from repro.core.metrics import pairwise_lp
+
+        return pairwise_lp(q, x, p, root=root)
+    return pallas_pairwise_lp(q, x, p, root=root, interpret=interpret)
+
+
 def _pick_tiles_gather(b: int, c: int, d: int) -> tuple[int, int]:
     """Choose (TB, TC) for the gather kernel.
 

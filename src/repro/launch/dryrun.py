@@ -22,7 +22,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_arch
 from repro.dist.sharding import Runtime, set_mesh

@@ -22,7 +22,6 @@ Everything is per-device (the HLO is the per-device SPMD module).
 
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.dist.sharding import Runtime, logical_to_spec, param_struct

@@ -17,23 +17,19 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.configs.base import get_arch
 from repro.data.pipeline import SyntheticTokenPipeline
 from repro.dist.sharding import Runtime, set_mesh, spec_shardings
 from repro.launch.mesh import make_local_mesh
-from repro.models.params import param_specs, _map_specs
+from repro.models.params import param_specs
 from repro.train.monitor import HeartbeatMonitor
 from repro.train.step import TrainConfig, init_train_state, make_train_step
 
 
 def state_shardings(cfg, rt, tc: TrainConfig):
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.dist.sharding import logical_to_spec
-    from repro.models.params import ParamSpec
 
     specs = param_specs(cfg)
     p_sh = spec_shardings(specs, rt)

@@ -11,9 +11,6 @@ so the full (B, S, V) logits tensor never materializes (V up to 256k).
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-
 import jax
 import jax.numpy as jnp
 
@@ -22,12 +19,7 @@ from repro.dist.sharding import Runtime, constrain
 from repro.models import attention as attn
 from repro.models import ffn as ffn_mod
 from repro.models import recurrent as rec
-from repro.models.params import (
-    ParamSpec,
-    layer_plan,
-    padded_vocab,
-    param_specs,
-)
+from repro.models.params import ParamSpec, layer_plan
 
 LOSS_CHUNK = 1024
 MTP_WEIGHT = 0.3

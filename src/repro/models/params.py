@@ -23,7 +23,7 @@ Logical axis vocabulary (mapped to mesh axes by repro.dist.sharding):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

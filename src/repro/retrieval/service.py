@@ -136,19 +136,23 @@ class UniversalVectorService:
     def build(cls, data: np.ndarray, params: UHNSWParams | None = None,
               m: int = 32, num_segments: int = 4, seed: int = 0,
               delta_capacity: int = 1024, rt=None,
-              expand_width: int | None = None, **kw):
+              expand_width: int | None = None, method: str | None = None,
+              **kw):
         """Build a segmented sharded index over `data` (n, d) f32.
 
         With rt (a repro.dist Runtime), the segment axis is placed over the
         mesh's data axes. expand_width (if given) overrides the params'
-        W-way multi-expansion factor for the level-0 beam. Remaining
-        kwargs configure the service (max_batch, min_bucket,
-        queue_capacity).
+        W-way multi-expansion factor for the level-0 beam. `method` picks
+        the per-segment graph builder ("incremental" / "bulk" /
+        "bulk_host", DESIGN.md §7; None = auto by segment size — the
+        batched bulk path above index.segment.BULK_THRESHOLD) and carries
+        over to delta compaction. Remaining kwargs configure the service
+        (max_batch, min_bucket, queue_capacity).
         """
         index = ShardedUHNSW.build(
             data, num_segments=num_segments, m=m,
             params=_with_expand_width(params, expand_width), seed=seed,
-            delta_capacity=delta_capacity,
+            delta_capacity=delta_capacity, method=method,
         )
         if rt is not None:
             index.shard_over(rt)
@@ -158,15 +162,23 @@ class UniversalVectorService:
     def build_monolithic(cls, data: np.ndarray,
                          params: UHNSWParams | None = None,
                          m: int = 32, bulk: bool = True, seed: int = 0,
-                         expand_width: int | None = None, **kw):
-        """Single-segment paper-exact index (no streaming inserts)."""
-        from repro.core.build import build_hnsw, build_hnsw_bulk
+                         expand_width: int | None = None,
+                         method: str | None = None, **kw):
+        """Single-segment paper-exact index (no streaming inserts).
 
-        builder = build_hnsw_bulk if bulk else build_hnsw
-        g1 = builder(data, 1.0, m=m, seed=seed)
-        g2 = builder(data, 2.0, m=m, seed=seed + 1)
+        `method` overrides the legacy `bulk` flag, which maps exactly as
+        on the segmented surfaces (index.segment.resolve_build_method):
+        bulk=True -> "bulk" (the batched shared-pass G1+G2 builder,
+        DESIGN.md §7), bulk=False -> "incremental"; "bulk_host" (the
+        vectorized NumPy per-graph builder) is reachable by name. The
+        actual method dispatch lives in `UHNSW.build`.
+        """
         params = _with_expand_width(params, expand_width)
-        return cls(index=UHNSW(g1, g2, params), **kw)
+        if method is None:
+            method = "bulk" if bulk else "incremental"
+        index = UHNSW.build(data, m=m, seed=seed, params=params,
+                            method=method)
+        return cls(index=index, **kw)
 
     # -- writes -------------------------------------------------------------
 

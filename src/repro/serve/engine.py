@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import Runtime
-from repro.models.model import decode_step, init_cache, prefill
+from repro.models.model import decode_step, prefill
 
 
 @dataclass

@@ -8,7 +8,6 @@ against ShapeDtypeStructs is exactly the multi-pod dry-run contract.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

@@ -2,7 +2,6 @@
 output shapes + finite loss + finite grads (deliverable f)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,134 @@
+"""The perf-regression gate (tools/check_bench.py).
+
+The CI bench-guard job is only as good as its checker, so the checker's
+semantics are pinned here: in-band drift passes, >20% regressions on gated
+metrics fail, dropped rows fail (coverage loss), new rows are skipped,
+quick-mode mismatches skip rather than compare apples to oranges, and the
+--selftest (injected 25% regression) trips on the committed baselines.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+import check_bench  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _beam_payload(**overrides):
+    row = {
+        "dataset": "trevi", "p": 0.8, "k": 50, "expand_width": 4,
+        "recall": 0.98, "mean_hops": 150.0, "mean_n_b": 1000.0,
+        "hops_speedup_vs_w1": 4.0,
+    }
+    row.update(overrides)
+    return {"bench": "beam", "status": "ok", "quick": True, "rows": [row]}
+
+
+def test_identical_payloads_pass():
+    base = _beam_payload()
+    problems, notes = check_bench.compare_bench("beam", base, base)
+    assert problems == [] and notes == []
+
+
+def test_in_band_drift_passes():
+    base = _beam_payload()
+    fresh = _beam_payload(mean_hops=150.0 * 1.15,          # +15% < 20% band
+                          hops_speedup_vs_w1=4.0 * 0.85,   # -15%
+                          recall=0.97)                     # -1 pt < 2 pt band
+    problems, _ = check_bench.compare_bench("beam", base, fresh)
+    assert problems == []
+
+
+@pytest.mark.parametrize("overrides", [
+    {"mean_hops": 150.0 * 1.25},            # lower-is-better +25%
+    {"hops_speedup_vs_w1": 4.0 * 0.75},     # higher-is-better -25%
+    {"recall": 0.95},                       # -3 pt > 2 pt recall band
+])
+def test_25pct_regression_fails(overrides):
+    problems, _ = check_bench.compare_bench(
+        "beam", _beam_payload(), _beam_payload(**overrides))
+    assert len(problems) == 1, problems
+
+
+def test_dropped_row_fails_and_new_row_skips():
+    base = _beam_payload()
+    fresh = _beam_payload(expand_width=8)  # different key: old row gone
+    problems, notes = check_bench.compare_bench("beam", base, fresh)
+    assert any("coverage dropped" in p for p in problems)
+    assert any("new row" in n for n in notes)
+
+
+def test_quick_mode_mismatch_skips():
+    base = _beam_payload()
+    fresh = _beam_payload()
+    fresh["quick"] = False
+    problems, notes = check_bench.compare_bench("beam", base, fresh)
+    assert problems == [] and any("quick-mode mismatch" in n for n in notes)
+
+
+def test_expect_quick_flags_stale_fresh(tmp_path, capsys):
+    """With --expect-quick (the CI invocation), a fresh file that is NOT
+    from a quick run means the bench silently didn't overwrite the
+    committed full-run JSON — that must fail, not skip."""
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    stale = _beam_payload()
+    stale["quick"] = False
+    (bdir / "BENCH_beam.json").write_text(json.dumps(_beam_payload()))
+    (fdir / "BENCH_beam.json").write_text(json.dumps(stale))
+    assert check_bench.run_check(bdir, fdir, ["beam"],
+                                 expect_quick=True) == 1
+    assert "did it run at all" in capsys.readouterr().out
+    # without the flag the mismatch stays a documented skip
+    assert check_bench.run_check(bdir, fdir, ["beam"]) == 0
+
+
+def test_expect_quick_flags_bad_baseline(tmp_path):
+    """--expect-quick also refuses an unhealthy baseline (full-run or
+    errored payload committed to results/baselines/quick) instead of
+    silently skipping the whole bench."""
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    (fdir / "BENCH_beam.json").write_text(json.dumps(_beam_payload()))
+    stale = _beam_payload()
+    stale["quick"] = False
+    (bdir / "BENCH_beam.json").write_text(json.dumps(stale))
+    assert check_bench.run_check(bdir, fdir, ["beam"],
+                                 expect_quick=True) == 1
+    errored = _beam_payload()
+    errored["status"] = "error"
+    (bdir / "BENCH_beam.json").write_text(json.dumps(errored))
+    assert check_bench.run_check(bdir, fdir, ["beam"],
+                                 expect_quick=True) == 1
+
+
+def test_errored_fresh_run_fails():
+    fresh = {"bench": "beam", "status": "error", "quick": True,
+             "error": "boom", "rows": []}
+    problems, _ = check_bench.compare_bench("beam", _beam_payload(), fresh)
+    assert any("status='error'" in p for p in problems)
+
+
+def test_bool_metric_flip_fails():
+    row = {"dataset": "deep", "distinct_p": 8, "k": 10,
+           "recall_mixed": 0.95, "speedup_warm": 1.2, "speedup_cold": 2.0,
+           "bitwise_equal": True}
+    base = {"bench": "serving", "status": "ok", "quick": True, "rows": [row]}
+    fresh = json.loads(json.dumps(base))
+    fresh["rows"][0]["bitwise_equal"] = False
+    problems, _ = check_bench.compare_bench("serving", base, fresh)
+    assert any("bitwise_equal" in p for p in problems)
+
+
+def test_selftest_trips_on_committed_baselines():
+    """The exact invocation the CI bench-guard job runs: self-compare must
+    pass, the injected 25% regression must fail."""
+    baselines = ROOT / "results" / "baselines" / "quick"
+    if not baselines.exists() or not list(baselines.glob("BENCH_*.json")):
+        pytest.skip("no committed quick baselines")
+    assert check_bench.selftest(baselines, ["build", "beam", "serving"]) == 0

@@ -3,7 +3,6 @@
 from collections import deque
 
 import numpy as np
-import pytest
 
 
 def _components(adj0):

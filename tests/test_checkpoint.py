@@ -1,9 +1,5 @@
 """Checkpoint store: roundtrip, atomicity, async, bf16, elastic restore."""
 
-import json
-import shutil
-from pathlib import Path
-
 import jax
 import jax.numpy as jnp
 import numpy as np

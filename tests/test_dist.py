@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -57,7 +56,6 @@ def test_production_mesh_rules_16x16():
 
 
 def test_pod_axis_detection():
-    import os
     # only run when enough devices were forced (the dry-run process);
     # locally validate the single-pod path
     rt = Runtime(mesh=jax.make_mesh((1, 1), ("data", "model")))

@@ -1,9 +1,8 @@
 """Unit tests for dry-run machinery that don't need 512 devices."""
 
-import numpy as np
 import pytest
 
-from repro.configs.base import ARCH_IDS, SHAPES, get_arch
+from repro.configs.base import get_arch
 from repro.configs.base import cells as cells_fn
 
 

@@ -1,0 +1,273 @@
+"""Perf-regression gate: compare fresh BENCH_*.json against committed baselines.
+
+The CI `bench-guard` job runs `benchmarks.run --quick` and then this
+checker, which compares the fresh `results/BENCH_<name>.json` files against
+the committed quick-mode baselines (`results/baselines/quick/`) with
+per-metric tolerance bands. Only *machine-portable* metrics are gated —
+recall, hop counts, Eq. 1 evaluation counts, and same-machine time ratios
+(bulk-vs-incremental build speedup, mixed-vs-grouped serving speedup) —
+never absolute wall-clock, which CI runners cannot reproduce.
+
+A metric regresses when it leaves its band:
+
+    higher-is-better:  fresh < base * (1 - rel_tol) - abs_slack
+    lower-is-better:   fresh > base * (1 + rel_tol) + abs_slack
+
+The default band is the 20% regression budget; recall metrics carry a
+tighter 2 pt absolute band (20% of a 0.95 recall would be absurdly lax),
+and cold-ratio metrics a wider one (jit-compile noise). Boolean metrics
+(bitwise_equal) must never flip to False. Rows are matched on identifying
+key fields; a baseline row with no fresh counterpart fails (the gate must
+notice dropped coverage), a fresh row with no baseline is reported and
+skipped (new coverage).
+
+Usage:
+  python tools/check_bench.py --baseline results/baselines/quick --fresh results
+  python tools/check_bench.py --selftest   # prove the gate trips on a
+                                           # synthetic 25% regression
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# direction: "higher" / "lower" / "bool-true"
+# band: (rel_tol, abs_slack)
+_RECALL_BAND = (0.0, 0.02)     # 2 pt absolute
+_RATIO_BAND = (0.20, 0.0)      # the 20% regression budget
+_COLD_BAND = (0.40, 0.0)       # cold ratios include jit compiles: noisy
+
+SPECS = {
+    "build": {
+        "keys": ("dataset", "n", "p"),
+        "metrics": {
+            "recall_bulk": ("higher", _RECALL_BAND),
+            "recall_incremental": ("higher", _RECALL_BAND),
+            "speedup_steady": ("higher", _RATIO_BAND),
+            "speedup_cold": ("higher", _COLD_BAND),
+        },
+    },
+    "beam": {
+        "keys": ("dataset", "p", "k", "expand_width"),
+        "metrics": {
+            "recall": ("higher", _RECALL_BAND),
+            "mean_hops": ("lower", _RATIO_BAND),
+            "mean_n_b": ("lower", _RATIO_BAND),
+            "hops_speedup_vs_w1": ("higher", _RATIO_BAND),
+        },
+    },
+    "serving": {
+        "keys": ("dataset", "distinct_p", "k"),
+        "metrics": {
+            "recall_mixed": ("higher", _RECALL_BAND),
+            "speedup_warm": ("higher", (0.25, 0.0)),
+            "speedup_cold": ("higher", _COLD_BAND),
+            "bitwise_equal": ("bool-true", None),
+        },
+    },
+}
+
+
+def _load(path: Path) -> dict | None:
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def _row_key(row: dict, keys: tuple[str, ...]) -> tuple:
+    return tuple(str(row.get(k)) for k in keys)
+
+
+def _check_metric(name, direction, band, base, fresh) -> str | None:
+    """Returns a problem description, or None if within the band."""
+    if direction == "bool-true":
+        if bool(base) and not bool(fresh):
+            return f"{name}: flipped {base} -> {fresh}"
+        return None
+    try:
+        base_v, fresh_v = float(base), float(fresh)
+    except (TypeError, ValueError):
+        return f"{name}: non-numeric ({base!r} -> {fresh!r})"
+    rel, slack = band
+    if direction == "higher":
+        floor = base_v * (1.0 - rel) - slack
+        if fresh_v < floor:
+            return (f"{name}: {fresh_v:g} < allowed {floor:g} "
+                    f"(baseline {base_v:g}, band -{rel:.0%}/-{slack:g})")
+    else:
+        ceil = base_v * (1.0 + rel) + slack
+        if fresh_v > ceil:
+            return (f"{name}: {fresh_v:g} > allowed {ceil:g} "
+                    f"(baseline {base_v:g}, band +{rel:.0%}/+{slack:g})")
+    return None
+
+
+def compare_bench(name: str, baseline: dict, fresh: dict) -> tuple[list, list]:
+    """Compare one bench's payloads. Returns (problems, notes)."""
+    spec = SPECS[name]
+    problems, notes = [], []
+    if fresh.get("status") != "ok":
+        return [f"{name}: fresh run status={fresh.get('status')!r} "
+                f"({fresh.get('error', 'no error recorded')})"], notes
+    if baseline.get("status") != "ok":
+        return problems, [f"{name}: baseline status!=ok, skipped"]
+    if bool(baseline.get("quick")) != bool(fresh.get("quick")):
+        return problems, [
+            f"{name}: quick-mode mismatch (baseline quick="
+            f"{baseline.get('quick')}, fresh quick={fresh.get('quick')}) — "
+            f"rows are not comparable, skipped"]
+    fresh_rows = {_row_key(r, spec["keys"]): r for r in fresh.get("rows", [])}
+    for brow in baseline.get("rows", []):
+        key = _row_key(brow, spec["keys"])
+        frow = fresh_rows.pop(key, None)
+        if frow is None:
+            problems.append(f"{name} {key}: row missing from fresh results "
+                            f"(coverage dropped)")
+            continue
+        for metric, (direction, band) in spec["metrics"].items():
+            if metric not in brow:
+                continue  # e.g. summary-only columns on per-p rows
+            if metric not in frow:
+                problems.append(f"{name} {key}: metric {metric} missing "
+                                f"from fresh row")
+                continue
+            bad = _check_metric(metric, direction, band, brow[metric],
+                                frow[metric])
+            if bad:
+                problems.append(f"{name} {key}: {bad}")
+    for key in fresh_rows:
+        notes.append(f"{name} {key}: new row (no baseline), skipped")
+    return problems, notes
+
+
+def run_check(baseline_dir: Path, fresh_dir: Path, benches: list[str],
+              expect_quick: bool | None = None) -> int:
+    """expect_quick: in CI the --fresh dir starts as the checkout (which
+    commits full-run BENCH_*.json) and the quick bench run is supposed to
+    overwrite it. Requiring quick=True on the fresh side turns "the bench
+    silently didn't run, we compared against the stale committed file"
+    from a vacuous skip into a failure."""
+    problems, notes = [], []
+    for name in benches:
+        base = _load(baseline_dir / f"BENCH_{name}.json")
+        fresh = _load(fresh_dir / f"BENCH_{name}.json")
+        if base is None:
+            notes.append(f"{name}: no committed baseline, skipped")
+            continue
+        if fresh is None:
+            problems.append(f"{name}: fresh BENCH_{name}.json missing — "
+                            f"did the bench run?")
+            continue
+        if expect_quick is not None:
+            # under the CI invocation a skip is a hole in the gate, so BOTH
+            # sides must be healthy quick-mode payloads, else fail
+            if bool(fresh.get("quick")) != expect_quick:
+                problems.append(
+                    f"{name}: fresh BENCH_{name}.json has quick="
+                    f"{fresh.get('quick')} but the gate expected "
+                    f"quick={expect_quick} — the bench run did not "
+                    f"overwrite the committed file (did it run at all?)")
+                continue
+            if base.get("status") != "ok" or \
+                    bool(base.get("quick")) != expect_quick:
+                problems.append(
+                    f"{name}: committed baseline is not a healthy "
+                    f"quick-mode payload (status="
+                    f"{base.get('status')!r}, quick={base.get('quick')}) — "
+                    f"regenerate results/baselines/quick/BENCH_{name}.json "
+                    f"from `benchmarks.run --quick`")
+                continue
+        p, n = compare_bench(name, base, fresh)
+        problems += p
+        notes += n
+    for n in notes:
+        print(f"  note: {n}")
+    if problems:
+        print(f"check_bench: {len(problems)} regression(s) vs "
+              f"{baseline_dir}:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"check_bench: all gated metrics within tolerance vs "
+          f"{baseline_dir}")
+    return 0
+
+
+def _degrade(payload: dict, factor: float) -> dict:
+    """Worsen every gated metric by `factor` (the injected regression)."""
+    out = json.loads(json.dumps(payload))  # deep copy
+    spec = SPECS[out["bench"]]
+    for row in out.get("rows", []):
+        for metric, (direction, _band) in spec["metrics"].items():
+            if metric not in row:
+                continue
+            if direction == "bool-true":
+                row[metric] = False
+            elif direction == "higher":
+                row[metric] = round(float(row[metric]) * (1 - factor), 4)
+            else:
+                row[metric] = round(float(row[metric]) * (1 + factor), 4)
+    return out
+
+
+def selftest(baseline_dir: Path, benches: list[str]) -> int:
+    """The gate must (a) pass a baseline against itself and (b) fail once a
+    25% regression is injected into every gated metric."""
+    import tempfile
+
+    found = [n for n in benches
+             if (baseline_dir / f"BENCH_{n}.json").exists()]
+    if not found:
+        print(f"selftest: no BENCH_*.json under {baseline_dir}")
+        return 1
+    with tempfile.TemporaryDirectory() as td:
+        tmp = Path(td)
+        for n in found:
+            payload = _load(baseline_dir / f"BENCH_{n}.json")
+            (tmp / f"BENCH_{n}.json").write_text(
+                json.dumps(_degrade(payload, 0.25)))
+        print("selftest phase 1: baseline vs itself (must pass)")
+        if run_check(baseline_dir, baseline_dir, found) != 0:
+            print("selftest FAIL: baseline does not pass against itself")
+            return 1
+        print("selftest phase 2: injected 25% regression (must fail)")
+        if run_check(baseline_dir, tmp, found) == 0:
+            print("selftest FAIL: 25% regression slipped through the gate")
+            return 1
+    print("selftest PASS: gate is live (self-compare clean, 25% regression "
+          "caught)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=Path,
+                    default=ROOT / "results" / "baselines" / "quick")
+    ap.add_argument("--fresh", type=Path, default=ROOT / "results")
+    ap.add_argument("--benches", type=str, default="build,beam,serving")
+    ap.add_argument("--selftest", action="store_true",
+                    help="inject a 25% regression and assert the gate trips")
+    ap.add_argument("--expect-quick", action="store_true",
+                    help="fail (instead of skip) any bench whose fresh "
+                         "JSON is not from a --quick run — guards against "
+                         "comparing a stale committed full-run file")
+    args = ap.parse_args(argv)
+    benches = [b for b in args.benches.split(",") if b]
+    unknown = [b for b in benches if b not in SPECS]
+    if unknown:
+        print(f"check_bench: no spec for bench(es) {unknown}; "
+              f"known: {sorted(SPECS)}")
+        return 2
+    if args.selftest:
+        return selftest(args.baseline, benches)
+    return run_check(args.baseline, args.fresh, benches,
+                     expect_quick=True if args.expect_quick else None)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
