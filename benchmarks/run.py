@@ -52,6 +52,7 @@ def main(argv=None) -> int:
         serving,
         sharded_index,
         table2_uhnsw_vs_mlsh,
+        verify,
     )
 
     benches = {
@@ -65,6 +66,7 @@ def main(argv=None) -> int:
         "beam": beam_width.run,
         "roofline": roofline.run,
         "serving": serving.run,
+        "verify": verify.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     unknown = only - set(benches)

@@ -252,9 +252,13 @@ def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops,
         all_dist = jnp.concatenate([dist, dv])
         # frontier entries join unexpanded; anything with inf distance
         # (sentinels, masked duplicates) is flagged expanded so it can never
-        # be selected -> guarantees loop progress.
-        all_exp = jnp.concatenate([exp, jnp.zeros((w * m0,), jnp.int32)])
-        all_exp = jnp.where(jnp.isinf(all_dist), 1, all_exp)
+        # be selected -> guarantees loop progress. The isinf mask is needed
+        # on the (W*m0) frontier half only: beam entries with inf distance
+        # already carry exp=1 (sentinel init + this very forcing in every
+        # earlier merge), so rebuilding it over the full (ef + W*m0) concat
+        # each hop was redundant work (measured in
+        # benchmarks/beam_width.py's merge micro-bench).
+        all_exp = jnp.concatenate([exp, jnp.isinf(dv).astype(jnp.int32)])
         sd, si, se = jax.lax.sort((all_dist, all_ids, all_exp), num_keys=1)
         return (si[:ef], sd[:ef], se[:ef], visited, nb, hops + 1)
 

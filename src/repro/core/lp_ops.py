@@ -51,18 +51,20 @@ def is_static_p(p) -> bool:
     return isinstance(p, (np.generic, np.ndarray)) and np.ndim(p) == 0
 
 
-def abs_pow(diff: jax.Array, p) -> jax.Array:
-    """|diff|^p elementwise, using the cheapest op sequence for this p.
-
-    p: Python float (static specialization) or an array broadcastable to
-    `diff` (per-element selection; see module docstring for the contract).
+def pow_from_abs(a: jax.Array, p) -> jax.Array:
+    """a^p elementwise for a >= 0 (a is already |diff|), cheapest op
+    sequence per p family. `abs_pow` is the |.|-including wrapper; the
+    early-abandoning blocked scan (DESIGN.md §8) calls this directly so
+    the one `jnp.abs` it shares with the base-metric accumulator is not
+    recomputed per family. For p == 2, a*a carries the same bits as
+    diff*diff (abs only flips the sign bit), so both entry points emit
+    one op-sequence table.
     """
-    a = jnp.abs(diff)
     if is_static_p(p):
         if p == 1.0:
             return a
         if p == 2.0:
-            return diff * diff
+            return a * a
         if p == 0.5:
             return jnp.sqrt(a)
         if p == 1.5:
@@ -76,10 +78,21 @@ def abs_pow(diff: jax.Array, p) -> jax.Array:
     safe = jnp.maximum(a, EPS)
     out = jnp.where(a == 0, 0.0, jnp.exp(p * jnp.log(safe)))
     out = jnp.where(p == 1.0, a, out)
-    out = jnp.where(p == 2.0, diff * diff, out)
+    out = jnp.where(p == 2.0, a * a, out)
     out = jnp.where(p == 0.5, jnp.sqrt(a), out)
     out = jnp.where(p == 1.5, a * jnp.sqrt(a), out)
     return out
+
+
+def abs_pow(diff: jax.Array, p) -> jax.Array:
+    """|diff|^p elementwise, using the cheapest op sequence for this p.
+
+    p: Python float (static specialization) or an array broadcastable to
+    `diff` (per-element selection; see module docstring for the contract).
+    """
+    if is_static_p(p) and p == 2.0:
+        return diff * diff  # skip the (bit-neutral) abs on the L2 hot path
+    return pow_from_abs(jnp.abs(diff), p)
 
 
 def _lp_root_impl(s: jax.Array, p, static_fold: bool) -> jax.Array:
@@ -124,3 +137,71 @@ def lp_root_folded(s: jax.Array, p) -> jax.Array:
     where `lax.optimization_barrier` is not guaranteed to lower through
     Mosaic and the historical constant-folded codegen should be kept."""
     return _lp_root_impl(s, p, static_fold=True)
+
+
+# ---------------------------------------------------------------------------
+# Early-abandoning verification bounds (DESIGN.md §8).
+#
+# The blocked-dimension scan abandons a candidate once a provable *lower
+# bound* on its final root-free power sum exceeds the running k-th-best.
+# Two bound families, both exact inequalities of real arithmetic:
+#
+#   * entry bound — from the base-metric beam distance Sb (already paid for
+#     under Eq. 1's N_b), before ANY dimension block is scanned:
+#       base L1:  sum|v|^p >= S1^p            for p <= 1  (norm monotonicity)
+#                 sum|v|^p >= d^(1-p) * S1^p  for p >  1  (Jensen, x^p convex)
+#       base L2:  sum|v|^p >= S2^(p/2)        for p <= 2  (superadditivity of
+#                                                          x^(p/2), p/2 <= 1)
+#   * suffix bound — mid-scan, from the *remaining* base mass
+#     R = Sb - (base partial sum over scanned dims): the same inequalities
+#     applied to the unscanned dimension suffix (d_rem dims).
+#
+# Float safety: the bounds are deflated by BOUND_SLACK so accumulated f32
+# rounding (non-negative sums err by <= ~d*ulp relative, far below 1e-3)
+# can never promote a bound above a value it does not exceed in real
+# arithmetic — a too-small bound only scans more, never breaks exactness.
+# Exponentials all route through `_safe_pow` (runtime exp/log, no
+# static-p fast path) so the static-p and traced-p programs emit the same
+# divide-free op sequence and round identically.
+# ---------------------------------------------------------------------------
+
+BOUND_SLACK = 1e-3
+
+
+def _safe_pow(x: jax.Array, e) -> jax.Array:
+    """x^e for x >= 0 via exp(e*log x), with x == 0 -> 0."""
+    safe = jnp.maximum(x, EPS)
+    return jnp.where(x <= 0, 0.0, jnp.exp(e * jnp.log(safe)))
+
+
+def lp_entry_bound(sb: jax.Array, base_p: float, p, d) -> jax.Array:
+    """Lower bound on sum|q-x|^p from the base-metric power sum `sb` of a
+    d-dimensional difference vector.
+
+    base_p is static (1.0 or 2.0 — the graph that generated the
+    candidates); p is a Python float or traced per-row scalar/array
+    broadcastable to sb; d may be a static int or traced (the blocked
+    scan passes its shrinking remaining-dim count). Callers pass sb = 0
+    to disable (bound becomes 0).
+    """
+    sb = jnp.maximum(sb, 0.0)
+    if base_p == 1.0:
+        lb = _safe_pow(sb, p)
+        dd = jnp.maximum(jnp.asarray(d, jnp.float32), 1.0)
+        if is_static_p(p):
+            if p > 1.0:
+                lb = lb * _safe_pow(dd, 1.0 - p)
+        else:
+            lb = jnp.where(p > 1.0, lb * _safe_pow(dd, 1.0 - p), lb)
+    else:
+        lb = _safe_pow(sb, p / 2.0 if is_static_p(p) else p * 0.5)
+    return lb * (1.0 - BOUND_SLACK)
+
+
+def lp_suffix_bound(r: jax.Array, base_p: float, p, d_rem) -> jax.Array:
+    """Lower bound on the unscanned suffix's power sum from its remaining
+    base mass r (= Sb - scanned base partial, clamped >= 0) over d_rem
+    dims — the same inequalities as `lp_entry_bound` applied to the
+    suffix, so it *is* that bound (one implementation to keep the two
+    abandonment paths from drifting)."""
+    return lp_entry_bound(r, base_p, p, d_rem)

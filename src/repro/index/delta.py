@@ -65,34 +65,59 @@ class DeltaBuffer:
         self._vecs, self._ids, self._cache = [], [], None
         return vecs, ids
 
-    def search(self, Q: jax.Array, p,
-               interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    def search(self, Q: jax.Array, p, interpret: bool | None = None,
+               thresh: jax.Array | None = None, block_d: int | None = None,
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
         """Exact rooted Lp distances of every buffered vector to each query.
 
         Q: (B, d) f32. p: Python float or (B,) array — row i of a mixed-p
         batch is scored under p[i] (the scalar-vs-vector contract,
         DESIGN.md §6). Returns (ids (B, n_delta) int32 global, dists
-        (B, n_delta) f32). Empty buffer -> (B, 0) arrays, so callers can
-        concatenate blindly.
+        (B, n_delta) f32, nd (B, n_delta) int32 dimensions scanned).
+        Empty buffer -> (B, 0) arrays, so callers can concatenate blindly.
 
-        Scoring routes through the exact-Lp dispatch entry point
-        (kernels/ops.lp_gather_distance) like every other query-path Lp
-        eval — in its 1-D shared-ids form, which the dispatcher runs as one
-        pairwise block over the once-gathered buffer (no per-query
-        re-gather; p=2 keeps its MXU matmul, for vector p via the per-row
-        identity selection). `interpret` forwards to the dispatcher.
+        With `thresh` (per-query rooted k-th-best distances from the
+        already-verified graph top-k) the scan routes through the
+        early-abandoning blocked kernel (kernels/ops.lp_gather_abandon,
+        DESIGN.md §8): buffered vectors whose partial power sum already
+        exceeds the bound score +inf and skip their remaining dimension
+        blocks — exact, since they provably cannot enter the top-k. The
+        rooted threshold is un-rooted with a 1e-4 inflation so the
+        root/power float round trip can never abandon a true top-k entry.
+
+        Without `thresh` scoring stays on the exact-Lp dispatch entry
+        point (kernels/ops.lp_gather_distance) in its 1-D shared-ids form,
+        which runs as one pairwise block over the once-gathered buffer (no
+        per-query re-gather; p=2 keeps its MXU matmul). `interpret`
+        forwards to the dispatcher either way.
         """
         b = Q.shape[0]
         if not self._vecs:
             z = jnp.zeros((b, 0))
-            return z.astype(jnp.int32), z
+            return z.astype(jnp.int32), z, z.astype(jnp.int32)
         if self._cache is None:
             self._cache = jnp.asarray(self.vectors())
+        n_delta = len(self._vecs)
+        d = self.d
+        ids = jnp.broadcast_to(jnp.asarray(self.ids())[None, :],
+                               (b, n_delta))
+        if thresh is not None:
+            from repro.core.lp_ops import pow_from_abs
+            from repro.kernels.ops import lp_gather_abandon
+
+            rows2d = jnp.broadcast_to(
+                jnp.arange(n_delta, dtype=jnp.int32)[None, :], (b, n_delta))
+            thr_pow = pow_from_abs(jnp.asarray(thresh, jnp.float32),
+                                   jnp.asarray(p, jnp.float32)) * (1 + 1e-4)
+            dists, nd = lp_gather_abandon(
+                Q, rows2d, self._cache, thr_pow,
+                jnp.zeros((b, n_delta), jnp.float32), p, root=True,
+                interpret=interpret, block_d=block_d,
+            )
+            return ids, dists, nd
         from repro.kernels.ops import lp_gather_distance
 
-        rows = jnp.arange(len(self._vecs), dtype=jnp.int32)
+        rows = jnp.arange(n_delta, dtype=jnp.int32)
         dists = lp_gather_distance(Q, rows, self._cache, p, root=True,
                                    interpret=interpret)
-        ids = jnp.broadcast_to(jnp.asarray(self.ids())[None, :],
-                               (b, len(self._vecs)))
-        return ids, dists
+        return ids, dists, jnp.full((b, n_delta), d, jnp.int32)

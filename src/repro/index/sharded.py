@@ -213,10 +213,10 @@ class ShardedUHNSW:
         """
         if metrics.is_static_p(p):
             p = float(p)
-            ids, dists, n_p, iters, n_b, hops, base_p = \
+            ids, dists, n_p, iters, n_b, hops, base_p, frac = \
                 self._graph_search_scalar(Q, p, k)
             return self._merge_delta(Q, p, k, ids, dists, n_p, iters, n_b,
-                                     hops, base_p)
+                                     hops, base_p, frac)
         return self._search_mixed(Q, p, k)
 
     def _graph_search_scalar(self, Q, p: float, k: int):
@@ -231,14 +231,17 @@ class ShardedUHNSW:
             dists = metrics._root(cand_dists[:, :k], p)
             n_p = jnp.zeros_like(n_b)
             iters = jnp.int32(0)
+            frac = jnp.ones(n_b.shape, jnp.float32)
         else:
             kappa = prm.kappa or max(k // 2, 1)
             # -1 padding passes through: verify_candidates scores it as inf
-            ids, dists, n_p, iters = verify_candidates(
+            ids, dists, n_p, iters, frac = verify_candidates(
                 Q, cand_ids, self.X, p, k, kappa, prm.tau,
-                interpret=prm.interpret,
+                interpret=prm.interpret, cand_base=cand_dists,
+                base_p=base_p, abandon=prm.abandon,
+                block_d=prm.abandon_block_d,
             )
-        return ids, dists, n_p, iters, n_b, hops, base_p
+        return ids, dists, n_p, iters, n_b, hops, base_p, frac
 
     def _segment_candidates(self, arrays, Q):
         """Vmapped per-segment beam search + one-sort merge (DESIGN.md §3)."""
@@ -261,13 +264,15 @@ class ShardedUHNSW:
         arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
         cand_ids, cand_dists, n_b, hops = self._segment_candidates(arrays, Q)
         kappa = prm.kappa or max(k // 2, 1)
-        ids, dists, n_p, iters = verify_candidates(
+        ids, dists, n_p, iters, frac = verify_candidates(
             Q, cand_ids, self.X, p_vec, k, kappa, prm.tau,
-            interpret=prm.interpret,
+            interpret=prm.interpret, cand_base=cand_dists, base_p=base_p,
+            abandon=prm.abandon, block_d=prm.abandon_block_d,
         )
-        ids, dists, n_p = mask_base_rows(cand_ids, cand_dists, ids, dists,
-                                         n_p, p_vec, base_p, k)
-        return ids, dists, n_p, iters, n_b, hops
+        ids, dists, n_p, frac = mask_base_rows(
+            cand_ids, cand_dists, ids, dists, n_p, p_vec, base_p, k,
+            n_dim_frac=frac)
+        return ids, dists, n_p, iters, n_b, hops, frac
 
     def _search_mixed(self, Q, p, k: int):
         """Mixed-p batch: two-way G1/G2 partition, then one delta merge."""
@@ -279,23 +284,43 @@ class ShardedUHNSW:
                                 p_arr.shape)
         return self._merge_delta(Q, p_arr, k, ids, dists, stats.n_p,
                                  stats.iterations, stats.n_b, stats.hops,
-                                 stats.base_p)
+                                 stats.base_p, stats.n_dim_frac)
 
     def _merge_delta(self, Q, p, k, ids, dists, n_p, iters, n_b, hops,
-                     base_p):
-        """Sort-merge exact delta-tier hits into the verified top-k."""
+                     base_p, n_dim_frac):
+        """Sort-merge exact delta-tier hits into the verified top-k.
+
+        With abandonment on, the delta scan inherits the verified top-k's
+        k-th-best as its abandon threshold (DESIGN.md §8): buffered
+        vectors that provably cannot enter the top-k skip their remaining
+        dimension blocks. `n_dim_frac` is then updated as the N_p-weighted
+        mean of the graph-verify fraction and the delta scan's fraction.
+        """
         if len(self.delta):
-            d_ids, d_dists = self.delta.search(
+            n_delta = len(self.delta)
+            d = self.X.shape[1]
+            # scalar basic-p scans have no transcendental work to skip and
+            # the no-thresh path keeps the 1-D shared-ids pairwise form
+            # (one gather for all queries, MXU matmul for p=2) — strictly
+            # cheaper than a per-query blocked scan
+            basic = metrics.is_static_p(p) and float(p) in (1.0, 2.0)
+            thresh = dists[:, k - 1] if (self.params.abandon and not basic) \
+                else None
+            d_ids, d_dists, d_nd = self.delta.search(
                 jnp.asarray(Q, dtype=jnp.float32), p,
-                interpret=self.params.interpret,
+                interpret=self.params.interpret, thresh=thresh,
+                block_d=self.params.abandon_block_d,
             )
             all_ids = jnp.concatenate([ids, d_ids], axis=1)
             all_d = jnp.concatenate([dists, d_dists], axis=1)
             sd, si = jax.lax.sort((all_d, all_ids), num_keys=1)
             ids, dists = si[:, :k], sd[:, :k]
-            n_p = n_p + len(self.delta)  # exact-Lp scans count toward N_p
+            delta_frac = d_nd.sum(axis=1).astype(jnp.float32) / (n_delta * d)
+            n_dim_frac = (n_dim_frac * n_p + delta_frac * n_delta) / \
+                jnp.maximum(n_p + n_delta, 1)
+            n_p = n_p + n_delta  # exact-Lp scans count toward N_p
         stats = SearchStats(n_b=n_b, n_p=n_p, iterations=iters, base_p=base_p,
-                            hops=hops)
+                            hops=hops, n_dim_frac=n_dim_frac)
         return ids, dists, stats
 
     def modeled_query_cost(self, stats: SearchStats, p, d: int) -> dict:

@@ -8,14 +8,20 @@ Fig. 1). On TPU the same hot-spot maps to VMEM-tiled Pallas kernels:
                    (L2 rides the MXU; L1/L0.5/L1.5 ride the VPU fast path;
                    general p pays exp/log transcendentals), plus the fused
                    gather+distance kernel ids (B,C) + X (n,d) -> (B,C) used
-                   by the verification hot path.
+                   by the verification hot path, plus the early-abandoning
+                   blocked-dimension variant (DESIGN.md §8) that skips the
+                   transcendental work of candidates already beaten by the
+                   running k-th best.
   ops.py         — jit'd dispatching wrappers with VMEM-aware tile selection;
                    `lp_gather_distance` is the single backend-aware entry
-                   point for exact-Lp candidate scoring in query code.
-  ref.py         — pure-jnp oracles (re-exported from repro.core.metrics).
+                   point for exact-Lp candidate scoring in query code, and
+                   `lp_gather_abandon` its adaptive-T_p sibling.
+  ref.py         — pure-jnp oracles (re-exported from repro.core.metrics,
+                   plus the blocked abandon oracle).
 """
 
 from repro.kernels.ops import (  # noqa: F401
+    lp_gather_abandon,
     lp_gather_distance,
     pallas_pairwise_lp,
     pallas_rowwise_lp,

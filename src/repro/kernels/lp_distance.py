@@ -33,7 +33,12 @@ from jax.experimental.pallas import tpu as pltpu
 # The per-p op-sequence table is shared with the jnp reference metrics
 # (repro.core.lp_ops) so kernel and oracle cannot drift.
 from repro.core.lp_ops import abs_pow as _abs_pow
-from repro.core.lp_ops import is_static_p
+from repro.core.lp_ops import (
+    is_static_p,
+    lp_entry_bound,
+    lp_suffix_bound,
+    pow_from_abs,
+)
 # Kernel bodies use the fold-friendly root: no optimization_barrier inside
 # Mosaic-lowered code (traced per-row p takes runtime division regardless).
 from repro.core.lp_ops import lp_root_folded as _root
@@ -438,3 +443,194 @@ def gather_lp_kernel_call(
         ],
         interpret=interpret,
     )(ids, q, x)
+
+
+# ---------------------------------------------------------------------------
+# early-abandoning gather + blocked-dimension distance kernel (DESIGN.md §8):
+# ids (B, C) + thresholds (B, 1) + base sums (B, C) + X (n, d)
+#   -> dists (B, C) power sums (+inf for abandoned), nd (B, C) scanned dims
+#
+# The adaptive-T_p hot path: root-free Lp power sums accumulate non-negative
+# terms, so a candidate's partial sum over a prefix of dimension blocks is a
+# monotone lower bound on its final distance — any candidate whose partial
+# sum (or provable lower bound, core/lp_ops.lp_entry_bound/lp_suffix_bound)
+# exceeds the per-query threshold tile is abandoned exactly, skipping all
+# remaining blocks' transcendental work.
+#
+# Layout: the gathered (TC, d) rows are transposed ONCE to (d, TC) so
+# dimension blocks are *sublane* slices (granularity 8, block_d=32 default)
+# while candidates occupy full 128-wide lanes — fine-grained abandonment
+# checks without wasting lanes (a (TC, 32) lane-dim slice would run the VPU
+# at 1/4 occupancy). Per block, `lax.cond` on the row's alive mask skips the
+# transcendental family entirely once every candidate in the tile is dead;
+# a row whose candidates are all dead at entry (threshold -inf = frozen
+# query, or every entry bound beaten) skips its DMA gather too.
+# ---------------------------------------------------------------------------
+
+
+def _abandon_row(ids_row, qi, thr, sb_row, pi, x_hbm, gx_ref, sem,
+                 *, base_p: float, n: int, block_c: int, block_d: int):
+    """One query row of the abandoning scan. Returns (dists, nd) (TC,)."""
+    d = qi.shape[0]
+    nb = d // block_d
+    valid = (ids_row >= 0) & (ids_row < n)
+    lb = lp_entry_bound(sb_row, base_p, pi, d)
+    alive0 = valid & (lb <= thr)
+
+    def dead_row(_):
+        return (jnp.full((block_c,), jnp.inf, jnp.float32),
+                jnp.zeros((block_c,), jnp.int32))
+
+    def scan_row(_):
+        _dma_gather_rows(ids_row, x_hbm, gx_ref, sem, n, block_c)
+        # one transpose + subtract; dimension blocks below are sublane
+        # slices of this (d, TC) diff tile
+        dt = gx_ref[...].astype(jnp.float32).T - qi[:, None]
+
+        def block_step(b, carry):
+            s, sbase, alive, nd = carry
+
+            def compute(args):
+                s, sbase, alive, nd = args
+                blk = jax.lax.dynamic_slice(
+                    dt, (b * block_d, 0), (block_d, block_c))
+                a = jnp.abs(blk)
+                bs = jnp.sum(pow_from_abs(a, pi), axis=0)
+                bb = jnp.sum(a if base_p == 1.0 else a * a, axis=0)
+                s = jnp.where(alive, s + bs, s)
+                sbase = jnp.where(alive, sbase + bb, sbase)
+                nd = nd + jnp.where(alive, block_d, 0)
+                dead = s > thr
+                d_rem = (d - (b + 1) * block_d).astype(jnp.float32)
+                rem = lp_suffix_bound(sb_row - sbase, base_p, pi, d_rem)
+                dead = dead | ((d_rem > 0) & (s + rem > thr))
+                return (s, sbase, alive & ~dead, nd)
+
+            return jax.lax.cond(jnp.any(carry[2]), compute,
+                                lambda args: args, carry)
+
+        s0 = jnp.zeros((block_c,), jnp.float32)
+        carry = (s0, s0, alive0, jnp.zeros((block_c,), jnp.int32))
+        s, _, alive, nd = jax.lax.fori_loop(0, nb, block_step, carry)
+        return jnp.where(alive, s, jnp.inf), nd
+
+    return jax.lax.cond(jnp.any(alive0), scan_row, dead_row, 0)
+
+
+def _gather_abandon_kernel(ids_ref, q_ref, th_ref, sb_ref, x_hbm,
+                           o_ref, nd_ref, gx_ref, sem,
+                           *, p: float, base_p: float, n: int,
+                           block_c: int, block_d: int):
+    tb = q_ref.shape[0]
+
+    def per_query(i, _):
+        out, nd = _abandon_row(
+            ids_ref[i, :], q_ref[i, :].astype(jnp.float32), th_ref[i, 0],
+            sb_ref[i, :], p, x_hbm, gx_ref, sem,
+            base_p=base_p, n=n, block_c=block_c, block_d=block_d,
+        )
+        o_ref[i, :] = out.astype(o_ref.dtype)
+        nd_ref[i, :] = nd
+        return 0
+
+    jax.lax.fori_loop(0, tb, per_query, 0)
+
+
+def _gather_abandon_vec_kernel(ids_ref, q_ref, th_ref, sb_ref, p_ref, x_hbm,
+                               o_ref, nd_ref, gx_ref, sem,
+                               *, base_p: float, n: int,
+                               block_c: int, block_d: int):
+    """Mixed-p variant: each query row scanned under its own traced p."""
+    tb = q_ref.shape[0]
+
+    def per_query(i, _):
+        out, nd = _abandon_row(
+            ids_ref[i, :], q_ref[i, :].astype(jnp.float32), th_ref[i, 0],
+            sb_ref[i, :], p_ref[i, 0], x_hbm, gx_ref, sem,
+            base_p=base_p, n=n, block_c=block_c, block_d=block_d,
+        )
+        o_ref[i, :] = out.astype(o_ref.dtype)
+        nd_ref[i, :] = nd
+        return 0
+
+    jax.lax.fori_loop(0, tb, per_query, 0)
+
+
+def gather_lp_abandon_kernel_call(
+    ids: jax.Array,     # (B, C) int32 candidate ids; out-of-range = padding
+    q: jax.Array,       # (B, d)
+    thresh: jax.Array,  # (B, 1) per-query abandon bound (power-sum space;
+                        # -inf = row frozen, +inf = no abandonment)
+    sb: jax.Array,      # (B, C) base-metric power sums (0 = no bound info)
+    x: jax.Array,       # (n, d) HBM-resident dataset
+    p,
+    *,
+    base_p: float = 1.0,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_d: int = 32,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw pallas_call for pre-padded inputs (B % block_b == C % block_c == 0,
+    d % block_d == 0). Returns (dists (B, C) root-free power sums with +inf
+    for abandoned/padding candidates, nd (B, C) int32 dimensions scanned).
+
+    p: Python float, or a pre-padded (B, 1) f32 array (one metric per query
+    row — the mixed-p contract in the module preamble). base_p (static 1.0
+    or 2.0) names the metric of `sb` for the entry/suffix bounds.
+    """
+    b, d = q.shape
+    b2, cc = ids.shape
+    n = x.shape[0]
+    assert b == b2 and b % block_b == 0 and cc % block_c == 0, \
+        (b, b2, cc, block_b, block_c)
+    assert d % block_d == 0, (d, block_d)
+
+    common = dict(
+        grid=(b // block_b, cc // block_c),
+        out_specs=(
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, cc), out_dtype),
+            jax.ShapeDtypeStruct((b, cc), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_c, d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )
+    if not is_static_p(p):
+        assert p.shape == (b, 1), (p.shape, b)
+        return pl.pallas_call(
+            functools.partial(
+                _gather_abandon_vec_kernel, base_p=base_p, n=n,
+                block_c=block_c, block_d=block_d,
+            ),
+            in_specs=[
+                pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+                pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+                pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),  # X stays in HBM
+            ],
+            **common,
+        )(ids, q, thresh, sb, p, x)
+    return pl.pallas_call(
+        functools.partial(
+            _gather_abandon_kernel, p=float(p), base_p=base_p, n=n,
+            block_c=block_c, block_d=block_d,
+        ),
+        in_specs=[
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # X stays in HBM
+        ],
+        **common,
+    )(ids, q, thresh, sb, x)

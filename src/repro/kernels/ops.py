@@ -403,6 +403,178 @@ def _lp_gather_distance_v(
     return lp_root(out, p[:, None]) if root else out
 
 
+def pick_abandon_block_d(d: int) -> int:
+    """Dimension-block width for the early-abandoning scan (DESIGN.md §8).
+
+    32 dims = 4 native (8, 128) f32 vregs per block in the transposed
+    (d, TC) layout — enough compute per block to amortize the per-block
+    alive-mask branch, fine enough that a junk candidate dies after a
+    small fraction of d. Falls back to 16/8 (sublane granularity floor)
+    when they divide d, else a single full-width block: entry-bound-only
+    abandonment, zero mid-scan checks.
+    """
+    for bd in (32, 16, 8):
+        if d % bd == 0:
+            return bd
+    return d
+
+
+def _pick_tiles_abandon(b: int, c: int, d: int) -> tuple[int, int]:
+    """Choose (TB, TC) for the abandon kernel.
+
+    Like `_pick_tiles_gather` plus the transposed (d, TC) diff tile the
+    blocked scan keeps live: ~ 4*(TB*d + 2*TC*d + 3*TB*TC) bytes.
+    """
+    tb = min(8, _round_up(b, 8))
+    tc = _LANE
+    while tc < min(512, c):
+        tc *= 2
+    while tc > _LANE and 4 * (tb * d + 2 * tc * d + 3 * tb * tc) > _VMEM_BUDGET:
+        tc //= 2
+    return max(tb, 8), max(tc, _LANE)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "base_p", "root", "interpret", "block_b",
+                     "block_c", "block_d"),
+)
+def _lp_gather_abandon_s(
+    q: jax.Array,
+    ids: jax.Array,
+    x: jax.Array,
+    thresh: jax.Array,
+    sb: jax.Array,
+    p: float,
+    base_p: float,
+    root: bool = False,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+    block_d: int | None = None,
+):
+    b, d = q.shape
+    bd = block_d or pick_abandon_block_d(d)
+    if interpret is None and not _on_tpu():
+        from repro.kernels.ref import gather_lp_abandon_ref
+
+        out, nd = gather_lp_abandon_ref(q, ids, x, thresh, sb, p, base_p, bd)
+        return (lp_root(out, p) if root else out), nd
+    if interpret is None:
+        interpret = False
+    _, cc = ids.shape
+    tb, tc = _pick_tiles_abandon(b, cc, d)
+    if block_b is not None:
+        tb = block_b
+    if block_c is not None:
+        tc = block_c
+    bp, cp = _round_up(b, tb), _round_up(cc, tc)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    ip = jnp.pad(ids.astype(jnp.int32), ((0, bp - b), (0, cp - cc)),
+                 constant_values=-1)
+    # padding rows get threshold -inf: every candidate dies at entry, so
+    # the kernel skips their DMA gathers entirely
+    tp = _pad_axis(thresh.astype(jnp.float32), 0, bp, -jnp.inf)[:, None]
+    sp = _pad_axis(_pad_axis(sb.astype(jnp.float32), 1, cp, 0.0), 0, bp, 0.0)
+    out, nd = _k.gather_lp_abandon_kernel_call(
+        ip, qp, tp, sp, x, p, base_p=base_p, block_b=tb, block_c=tc,
+        block_d=bd, interpret=interpret,
+    )
+    out, nd = out[:b, :cc], nd[:b, :cc]
+    return (lp_root(out, p) if root else out), nd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("base_p", "root", "interpret", "block_b", "block_c",
+                     "block_d"),
+)
+def _lp_gather_abandon_v(
+    q: jax.Array,
+    ids: jax.Array,
+    x: jax.Array,
+    thresh: jax.Array,
+    sb: jax.Array,
+    p: jax.Array,    # (B,) per-query metric
+    base_p: float,
+    root: bool = False,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+    block_d: int | None = None,
+):
+    b, d = q.shape
+    p = jnp.broadcast_to(p, (b,))  # (1,) = "one p for every row"
+    bd = block_d or pick_abandon_block_d(d)
+    if interpret is None and not _on_tpu():
+        from repro.kernels.ref import gather_lp_abandon_ref
+
+        out, nd = gather_lp_abandon_ref(q, ids, x, thresh, sb, p, base_p, bd)
+        return (lp_root(out, p[:, None]) if root else out), nd
+    if interpret is None:
+        interpret = False
+    _, cc = ids.shape
+    tb, tc = _pick_tiles_abandon(b, cc, d)
+    if block_b is not None:
+        tb = block_b
+    if block_c is not None:
+        tc = block_c
+    bp, cp = _round_up(b, tb), _round_up(cc, tc)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    ip = jnp.pad(ids.astype(jnp.int32), ((0, bp - b), (0, cp - cc)),
+                 constant_values=-1)
+    tp = _pad_axis(thresh.astype(jnp.float32), 0, bp, -jnp.inf)[:, None]
+    sp = _pad_axis(_pad_axis(sb.astype(jnp.float32), 1, cp, 0.0), 0, bp, 0.0)
+    out, nd = _k.gather_lp_abandon_kernel_call(
+        ip, qp, tp, sp, x, _pad_p_col(p, bp), base_p=base_p, block_b=tb,
+        block_c=tc, block_d=bd, interpret=interpret,
+    )
+    out, nd = out[:b, :cc], nd[:b, :cc]
+    return (lp_root(out, p[:, None]) if root else out), nd
+
+
+def lp_gather_abandon(
+    q: jax.Array,       # (B, d) f32 queries
+    ids: jax.Array,     # (B, C) int32 candidate ids; out-of-range = padding
+    x: jax.Array,       # (n, d) f32 dataset
+    thresh: jax.Array,  # (B,) per-query abandon bound (power-sum space;
+                        # +inf = no abandonment, -inf = skip the whole row)
+    sb: jax.Array,      # (B, C) base-metric power sums of the candidates
+                        # (the beam's distances), or 0 to disable bounds
+    p,
+    base_p: float = 1.0,
+    root: bool = False,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+    block_d: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Early-abandoning exact-Lp scoring (DESIGN.md §8) -> (dists, nd).
+
+    The adaptive-T_p sibling of `lp_gather_distance`: per-query-row
+    thresholds abandon candidates whose blocked partial power sum (or the
+    base-distance entry/suffix lower bound, core/lp_ops) already exceeds
+    the running k-th best — abandoned and padding candidates score +inf,
+    which is exact for top-k purposes because a power sum only grows.
+    `nd` (B, C) int32 counts the dimensions actually scanned per candidate
+    (0 for entry-abandoned), the numerator of `SearchStats.n_dim_frac`.
+
+    p follows the scalar-vs-vector contract (DESIGN.md §6); base_p (static
+    1.0/2.0) names the metric of `sb`. Dispatch matches
+    `lp_gather_distance`: fused Pallas kernel on TPU, the blocked jnp
+    reference (kernels/ref.py — computes-then-masks, same `nd`
+    accounting) off TPU, `interpret=True` for CPU kernel-parity tests.
+    """
+    if is_static_p(p):
+        return _lp_gather_abandon_s(q, ids, x, thresh, sb, float(p),
+                                    float(base_p), root, interpret,
+                                    block_b, block_c, block_d)
+    return _lp_gather_abandon_v(
+        q, ids, x, thresh, sb,
+        jnp.atleast_1d(jnp.asarray(p, jnp.float32)), float(base_p), root,
+        interpret, block_b, block_c, block_d)
+
+
 def lp_gather_distance(
     q: jax.Array,    # (B, d) f32 queries
     ids: jax.Array,  # (B, C) int32 candidate ids; anything outside [0, n) is

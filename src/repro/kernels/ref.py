@@ -5,8 +5,22 @@ kernels must match these to float tolerance across all shapes/dtypes/p.
 Like the kernels, the oracles accept p as a Python float or as a (B,)
 per-query-row array (the mixed-p contract, DESIGN.md §6) — so every
 vector-p kernel has a vector-p oracle with identical semantics.
+
+`gather_lp_abandon_ref` is additionally the *off-TPU production path* for
+the early-abandoning blocked verification (DESIGN.md §8): XLA:CPU cannot
+skip masked work, so it computes every block and masks — the scanned-dim
+accounting (`nd`) still reports exactly what the TPU kernel would skip.
 """
 
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.lp_ops import (
+    is_static_p,
+    lp_entry_bound,
+    lp_suffix_bound,
+    pow_from_abs,
+)
 from repro.core.metrics import (  # noqa: F401
     lp_distance,
     numpy_lp,
@@ -17,3 +31,58 @@ from repro.core.metrics import (  # noqa: F401
 # Aliases matching the kernel entry points one-to-one.
 pairwise_lp_ref = pairwise_lp
 rowwise_lp_ref = rowwise_lp
+
+
+def gather_lp_abandon_ref(
+    q: jnp.ndarray,       # (B, d) f32
+    ids: jnp.ndarray,     # (B, C) int32; out-of-range = padding
+    x: jnp.ndarray,       # (n, d) f32
+    thresh: jnp.ndarray,  # (B,) abandon bound, power-sum space
+    sb: jnp.ndarray,      # (B, C) base-metric power sums (0 = no bound)
+    p,                    # Python float or (B,) f32
+    base_p: float,
+    block_d: int,
+):
+    """Blocked early-abandoning oracle for `gather_lp_abandon_kernel_call`.
+
+    Identical scan semantics to the kernel — same block order (a candidate
+    that is abandoned mid-scan has exactly the same partial sum on both
+    paths), same entry/suffix bounds (shared helpers in core/lp_ops), same
+    `(dists, nd)` outputs; abandoned and padding candidates score +inf and
+    dims scanned after a candidate dies are not counted. The per-block
+    reduction mirrors the kernel's transposed (block_d, TC) axis-0 sum.
+    Requires d % block_d == 0 (the dispatcher picks block_d accordingly).
+    """
+    n, d = x.shape
+    assert d % block_d == 0, (d, block_d)
+    nb = d // block_d
+    valid = (ids >= 0) & (ids < n)
+    diff = x[jnp.clip(ids, 0, n - 1)] - q[:, None, :]   # (B, C, d)
+    dt = jnp.swapaxes(diff, 1, 2)                       # (B, d, C)
+    if is_static_p(p):
+        p_blk = p_row = p
+    else:
+        p_blk = p[:, None, None]
+        p_row = p[:, None]
+    thr = thresh[:, None]
+    lb = lp_entry_bound(sb, base_p, p_row, d)
+    alive = valid & (lb <= thr)
+    s = jnp.zeros_like(sb)
+    sbase = jnp.zeros_like(sb)
+    nd = jnp.zeros(sb.shape, jnp.int32)
+    for b in range(nb):
+        blk = lax.slice_in_dim(dt, b * block_d, (b + 1) * block_d, axis=1)
+        a = jnp.abs(blk)
+        bs = jnp.sum(pow_from_abs(a, p_blk), axis=1)
+        bb = jnp.sum(a if base_p == 1.0 else a * a, axis=1)
+        s = jnp.where(alive, s + bs, s)
+        sbase = jnp.where(alive, sbase + bb, sbase)
+        nd = nd + jnp.where(alive, block_d, 0)
+        dead = s > thr
+        d_rem = d - (b + 1) * block_d
+        if d_rem > 0:
+            rem = lp_suffix_bound(sb - sbase, base_p, p_row,
+                                  float(d_rem))
+            dead = dead | (s + rem > thr)
+        alive = alive & ~dead
+    return jnp.where(alive, s, jnp.inf), nd

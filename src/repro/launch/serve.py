@@ -73,13 +73,18 @@ def serve_retrieval(args) -> int:
           f"({len(out) / dt:.0f} qps, {st['batches']} padded buckets, "
           f"queue peak {st['queue_peak']}); "
           f"avg N_b={st['n_b'] / len(reqs):.0f} "
-          f"N_p={st['n_p'] / len(reqs):.0f}; "
+          f"N_p={st['n_p'] / len(reqs):.0f} "
+          # effective T_p under early-abandoning verification (DESIGN.md
+          # §8); no verification at all (n_p == 0) means full-dim = 1.0
+          f"dim-scan="
+          f"{st['dim_frac_w'] / st['n_p'] if st['n_p'] else 1.0:.2f}; "
           f"latency p50={lat['p50']:.0f}ms p95={lat['p95']:.0f}ms")
     for name, pb in st["per_base"].items():
         if pb["queries"]:
             print(f"  {name}: {pb['queries']} queries / {pb['batches']} "
                   f"batches, avg N_b={pb['n_b'] / pb['queries']:.0f} "
-                  f"N_p={pb['n_p'] / pb['queries']:.0f}")
+                  f"N_p={pb['n_p'] / pb['queries']:.0f} dim-scan="
+                  f"{pb['dim_frac_w'] / pb['n_p'] if pb['n_p'] else 1.0:.2f}")
     return 0
 
 

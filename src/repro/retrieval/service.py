@@ -18,7 +18,10 @@ values. This scheduler instead threads p through the kernel stack as a
     independent of how many distinct p values the stream contains;
   * per-request latency, queue-depth, and per-base-graph / per-p-bucket
     N_b / N_p stats, so benchmark results are attributable (`stats`,
-    `latency_summary`).
+    `latency_summary`). Verify buckets additionally report their
+    N_p-weighted scanned-dimension work (`stats["dim_frac_w"]`,
+    DESIGN.md §8) so Eq. 1's effective T_p under early-abandoning
+    verification is observable per base graph.
 
 Results are bit-identical to per-p grouped serving (`serve_grouped`, kept
 as the measurement baseline): the vector-p kernels select each row's
@@ -76,13 +79,19 @@ def _empty_stats() -> dict:
     return {
         "queries": 0, "batches": 0, "inserts": 0, "compactions": 0,
         "n_b": 0.0, "n_p": 0.0,      # aggregate Eq. 1 counters
+        # N_p-weighted scanned-dimension work (DESIGN.md §8): the
+        # early-abandoning verify buckets report effective T_p as
+        # dim_frac_w / n_p (1.0 = full-dimension scans everywhere)
+        "dim_frac_w": 0.0,
         "padded_rows": 0,            # bucket-padding rows executed
         "queue_peak": 0,             # high-water queue depth
         # attribution (the ISSUE's stats fix): one bucket per base graph
         # and one per distinct requested p, each with its own Eq. 1 split
         "per_base": {
-            "G1": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0},
-            "G2": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0},
+            "G1": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
+                   "dim_frac_w": 0.0},
+            "G2": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
+                   "dim_frac_w": 0.0},
         },
         "per_p": {},                 # "%g" % p -> {queries, n_b, n_p}
         # per-request submit->response latency; bounded so a long-running
@@ -310,6 +319,10 @@ class UniversalVectorService:
         dists = np.asarray(dists)[:n_real]
         n_b = np.asarray(stats.n_b, dtype=np.float64)[:n_real]
         n_p = np.asarray(stats.n_p, dtype=np.float64)[:n_real]
+        # N_p-weighted scanned-dim fraction (1.0 on full-dimension paths)
+        frac = np.asarray(stats.n_dim_frac, dtype=np.float64)
+        frac = frac[:n_real] if frac.ndim else np.full(n_real, float(frac))
+        frac_w = float((frac * n_p).sum())
         done = time.perf_counter()
         st = self.stats
         st["queries"] += n_real
@@ -317,11 +330,13 @@ class UniversalVectorService:
         st["padded_rows"] += size - n_real
         st["n_b"] += float(n_b.sum())
         st["n_p"] += float(n_p.sum())
+        st["dim_frac_w"] += frac_w
         pb = st["per_base"]["G1" if base == 1.0 else "G2"]
         pb["queries"] += n_real
         pb["batches"] += 1
         pb["n_b"] += float(n_b.sum())
         pb["n_p"] += float(n_p.sum())
+        pb["dim_frac_w"] += frac_w
         for i, (r, t0) in enumerate(chunk):
             out[r.request_id] = (ids[i], dists[i])
             pp = st["per_p"].setdefault(

@@ -70,6 +70,20 @@ SPECS = {
             "bitwise_equal": ("bool-true", None),
         },
     },
+    # early-abandoning verification (DESIGN.md §8): the scanned-dimension
+    # fraction is the tentpole metric — lower is better, and a fresh run
+    # scanning >20%+2pt more than the committed baseline means the
+    # abandonment machinery regressed. ids_equal flipping means the
+    # exactness guarantee broke: hard fail.
+    "verify": {
+        "keys": ("dataset", "d", "p"),
+        "metrics": {
+            "n_dim_frac": ("lower", (0.20, 0.02)),
+            "recall_abandon": ("higher", _RECALL_BAND),
+            "recall_full": ("higher", _RECALL_BAND),
+            "ids_equal": ("bool-true", None),
+        },
+    },
 }
 
 
@@ -249,7 +263,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", type=Path,
                     default=ROOT / "results" / "baselines" / "quick")
     ap.add_argument("--fresh", type=Path, default=ROOT / "results")
-    ap.add_argument("--benches", type=str, default="build,beam,serving")
+    ap.add_argument("--benches", type=str, default="build,beam,serving,verify")
     ap.add_argument("--selftest", action="store_true",
                     help="inject a 25% regression and assert the gate trips")
     ap.add_argument("--expect-quick", action="store_true",
