@@ -84,6 +84,24 @@ class UHNSWParams:
     abandon_block_d: int | None = None  # dimension-block width; None = auto
 
 
+class CandidateSet(NamedTuple):
+    """Device-resident output of the candidate-generation stage.
+
+    The two-stage serving engine (repro.retrieval.engine, DESIGN.md §6)
+    dispatches candidate generation and verification as separate device
+    calls so the scheduler can pipeline wave N+1's base search against
+    wave N's verification. Everything here stays on device between the
+    stages; `base_p` names the base metric (1.0 = G1 / 2.0 = G2) the
+    candidates were generated under.
+    """
+
+    ids: jax.Array         # (B, t) int32, ascending by base-metric distance
+    base_dists: jax.Array  # (B, t) root-free base-metric power sums
+    n_b: jax.Array         # (B,) base-metric evaluation counts (Eq. 1)
+    hops: jax.Array        # (B,) level-0 while_loop trips
+    base_p: float          # which base metric generated the candidates
+
+
 class SearchStats(NamedTuple):
     n_b: jax.Array        # (B,) base-metric Q2D evaluation counts
     n_p: jax.Array        # (B,) Lp Q2D evaluation counts
@@ -473,6 +491,11 @@ class UHNSW:
         self.arrays1 = GraphArrays.from_graph(g1)
         self.arrays2 = GraphArrays.from_graph(g2)
 
+    @property
+    def dim(self) -> int:
+        """Vector dimensionality served by this index."""
+        return int(self.X.shape[1])
+
     # -- construction -------------------------------------------------------
 
     @classmethod
@@ -558,62 +581,83 @@ class UHNSW:
             return self._search_scalar(Q, float(p), k)
         return self._search_mixed(Q, p, k)
 
-    def _search_scalar(self, Q, p: float, k: int):
+    def search_stage_candidates(self, Q, base_p: float) -> CandidateSet:
+        """Stage 1 of 2: base-metric candidate generation (Alg. 1 lines 1-6).
+
+        Dispatches the batched beam search on the base graph named by
+        `base_p` (1.0 = G1, 2.0 = G2) and returns the device-resident
+        CandidateSet without forcing a host sync — the serving engine
+        (DESIGN.md §6) overlaps this call for wave N+1 with wave N's
+        verification. `search` composes exactly this stage with
+        `search_stage_finish`, so staged execution is bitwise-identical
+        to the fused call by construction.
+        """
         prm = self.params
         Q = jnp.asarray(Q, dtype=jnp.float32)
-        arrays, base_p = self.base_graph_for(p)
+        arrays = self.arrays1 if base_p == 1.0 else self.arrays2
         # bulk-built graphs want a beam wider than t (they trade the
         # sequential builder's deep exploration for vectorized construction)
-        ef = prm.ef or 2 * prm.t
-        ef = max(ef, prm.t)
+        ef = max(prm.ef or 2 * prm.t, prm.t)
         cand_ids, cand_dists, n_b, hops = knn_search(
             arrays, self.X, Q, ef=ef, t=prm.t, max_hops=prm.max_hops,
             # degenerate tiny beams can't host the full W; clamp, don't fail
             expand_width=min(prm.expand_width, ef),
         )
-        if p == base_p:
+        return CandidateSet(ids=cand_ids, base_dists=cand_dists, n_b=n_b,
+                            hops=hops, base_p=base_p)
+
+    def search_stage_finish(self, Q, cands: CandidateSet, p, k: int):
+        """Stage 2 of 2: verification (or the base-metric skip) over a
+        CandidateSet from `search_stage_candidates`.
+
+        p follows the scalar-vs-vector contract: a float equal to
+        `cands.base_p` takes the exact skip path (the beam ordering is
+        already exact); any other float runs scalar-p verification; a
+        (B,) array runs the traced-p program with the per-row base-metric
+        mask. Returns (ids, dists, SearchStats) — all device-resident.
+        """
+        prm = self.params
+        Q = jnp.asarray(Q, dtype=jnp.float32)
+        base_p = cands.base_p
+        cand_ids, cand_dists = cands.ids, cands.base_dists
+        n_b, hops = cands.n_b, cands.hops
+        if metrics.is_static_p(p) and float(p) == base_p:
             # p equals the base metric: the graph's own ordering is exact
             ids = cand_ids[:, :k]
-            dists = metrics._root(cand_dists[:, :k], p)
-            stats = SearchStats(n_b=n_b, n_p=jnp.zeros_like(n_b),
-                                iterations=jnp.int32(0), base_p=base_p,
-                                hops=hops,
-                                n_dim_frac=jnp.ones(n_b.shape, jnp.float32))
-            return ids, dists, stats
+            dists = metrics._root(cand_dists[:, :k], float(p))
+            return ids, dists, SearchStats(
+                n_b=n_b, n_p=jnp.zeros_like(n_b), iterations=jnp.int32(0),
+                base_p=base_p, hops=hops,
+                n_dim_frac=jnp.ones(n_b.shape, jnp.float32))
         kappa = prm.kappa or max(k // 2, 1)
+        p_arg = float(p) if metrics.is_static_p(p) else p
         ids, dists, n_p, iters, frac = verify_candidates(
-            Q, cand_ids, self.X, p, k, kappa, prm.tau,
+            Q, cand_ids, self.X, p_arg, k, kappa, prm.tau,
             interpret=prm.interpret, cand_base=cand_dists, base_p=base_p,
             abandon=prm.abandon, block_d=prm.abandon_block_d,
         )
+        if not metrics.is_static_p(p):
+            # per-row base-metric skip: base-p rows return the exact values
+            # the scalar skip path produces
+            ids, dists, n_p, frac = mask_base_rows(
+                cand_ids, cand_dists, ids, dists, n_p, p, base_p, k,
+                n_dim_frac=frac)
         return ids, dists, SearchStats(n_b=n_b, n_p=n_p, iterations=iters,
                                        base_p=base_p, hops=hops,
                                        n_dim_frac=frac)
 
-    def _search_base_vec(self, Q, p_vec, k: int, base_p: float):
-        """One homogeneous-base sub-batch with per-row p (traced-p program).
+    def _search_scalar(self, Q, p: float, k: int):
+        _, base_p = self.base_graph_for(p)
+        cands = self.search_stage_candidates(Q, base_p)
+        return self.search_stage_finish(Q, cands, p, k)
 
-        Rows whose p equals the base metric take the beam's own ordering
-        (the paper's special-p skip) via a per-row mask, so they return the
-        exact values the scalar skip path produces.
-        """
-        prm = self.params
-        arrays = self.arrays1 if base_p == 1.0 else self.arrays2
-        ef = max(prm.ef or 2 * prm.t, prm.t)
-        cand_ids, cand_dists, n_b, hops = knn_search(
-            arrays, self.X, Q, ef=ef, t=prm.t, max_hops=prm.max_hops,
-            expand_width=min(prm.expand_width, ef),
-        )
-        kappa = prm.kappa or max(k // 2, 1)
-        ids, dists, n_p, iters, frac = verify_candidates(
-            Q, cand_ids, self.X, p_vec, k, kappa, prm.tau,
-            interpret=prm.interpret, cand_base=cand_dists, base_p=base_p,
-            abandon=prm.abandon, block_d=prm.abandon_block_d,
-        )
-        ids, dists, n_p, frac = mask_base_rows(
-            cand_ids, cand_dists, ids, dists, n_p, p_vec, base_p, k,
-            n_dim_frac=frac)
-        return ids, dists, n_p, iters, n_b, hops, frac
+    def _search_base_vec(self, Q, p_vec, k: int, base_p: float):
+        """One homogeneous-base sub-batch with per-row p (traced-p program),
+        as the two stages composed back-to-back."""
+        cands = self.search_stage_candidates(Q, base_p)
+        ids, dists, st = self.search_stage_finish(Q, cands, p_vec, k)
+        return (ids, dists, st.n_p, st.iterations, st.n_b, st.hops,
+                st.n_dim_frac)
 
     def _search_mixed(self, Q, p, k: int):
         """Mixed-p batch: two-way G1/G2 partition + per-row-p programs."""

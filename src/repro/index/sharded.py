@@ -38,6 +38,7 @@ from repro.core import metrics
 from repro.core.hnsw import GraphArrays, knn_search
 from repro.core.metrics import base_metric_for
 from repro.core.uhnsw import (
+    CandidateSet,
     SearchStats,
     UHNSWParams,
     mask_base_rows,
@@ -154,6 +155,11 @@ class ShardedUHNSW:
         return self._next_id
 
     @property
+    def dim(self) -> int:
+        """Vector dimensionality served by this index."""
+        return int(self._X_host.shape[1])
+
+    @property
     def num_segments(self) -> int:
         return self.segments.num_segments
 
@@ -213,35 +219,74 @@ class ShardedUHNSW:
         """
         if metrics.is_static_p(p):
             p = float(p)
-            ids, dists, n_p, iters, n_b, hops, base_p, frac = \
-                self._graph_search_scalar(Q, p, k)
-            return self._merge_delta(Q, p, k, ids, dists, n_p, iters, n_b,
-                                     hops, base_p, frac)
+            _, base_p = self.base_arrays_for(p)
+            cands = self.search_stage_candidates(Q, base_p)
+            return self.search_stage_finish(Q, cands, p, k)
         return self._search_mixed(Q, p, k)
 
-    def _graph_search_scalar(self, Q, p: float, k: int):
-        """Frozen-segment search for a single-p batch (no delta merge)."""
+    def search_stage_candidates(self, Q, base_p: float) -> CandidateSet:
+        """Stage 1 of 2: segmented base-metric candidate generation.
+
+        Same contract as `UHNSW.search_stage_candidates` (DESIGN.md §6):
+        dispatches the vmapped per-segment beam search + one-sort merge on
+        the base graph named by `base_p` and returns the device-resident
+        CandidateSet without a host sync, so the serving engine can overlap
+        wave N+1's search with wave N's verification.
+        """
+        Q = jnp.asarray(Q, dtype=jnp.float32)
+        seg = self.segments
+        arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
+        cand_ids, cand_dists, n_b, hops = self._segment_candidates(arrays, Q)
+        return CandidateSet(ids=cand_ids, base_dists=cand_dists, n_b=n_b,
+                            hops=hops, base_p=base_p)
+
+    def search_stage_finish(self, Q, cands: CandidateSet, p, k: int):
+        """Stage 2 of 2: verification (or base-metric skip) + delta merge.
+
+        Unlike the monolithic index, finishing here includes the exact
+        delta-tier sort-merge — delta hits need no verification, so they
+        belong to this stage, and `search` composes exactly these two
+        stages (bitwise parity with staged execution by construction).
+        """
         prm = self.params
         Q = jnp.asarray(Q, dtype=jnp.float32)
-        arrays, base_p = self.base_arrays_for(p)
-        cand_ids, cand_dists, n_b, hops = self._segment_candidates(arrays, Q)
-        if p == base_p:
-            # base-metric query: the merged graph ordering is already exact
-            ids = cand_ids[:, :k]
-            dists = metrics._root(cand_dists[:, :k], p)
-            n_p = jnp.zeros_like(n_b)
-            iters = jnp.int32(0)
-            frac = jnp.ones(n_b.shape, jnp.float32)
-        else:
-            kappa = prm.kappa or max(k // 2, 1)
-            # -1 padding passes through: verify_candidates scores it as inf
-            ids, dists, n_p, iters, frac = verify_candidates(
-                Q, cand_ids, self.X, p, k, kappa, prm.tau,
-                interpret=prm.interpret, cand_base=cand_dists,
-                base_p=base_p, abandon=prm.abandon,
-                block_d=prm.abandon_block_d,
-            )
-        return ids, dists, n_p, iters, n_b, hops, base_p, frac
+        base_p = cands.base_p
+        cand_ids, cand_dists = cands.ids, cands.base_dists
+        n_b, hops = cands.n_b, cands.hops
+        kappa = prm.kappa or max(k // 2, 1)
+        if metrics.is_static_p(p):
+            p = float(p)
+            if p == base_p:
+                # base-metric query: merged graph ordering is already exact
+                ids = cand_ids[:, :k]
+                dists = metrics._root(cand_dists[:, :k], p)
+                n_p = jnp.zeros_like(n_b)
+                iters = jnp.int32(0)
+                frac = jnp.ones(n_b.shape, jnp.float32)
+            else:
+                # -1 padding passes through: verify_candidates scores it inf
+                ids, dists, n_p, iters, frac = verify_candidates(
+                    Q, cand_ids, self.X, p, k, kappa, prm.tau,
+                    interpret=prm.interpret, cand_base=cand_dists,
+                    base_p=base_p, abandon=prm.abandon,
+                    block_d=prm.abandon_block_d,
+                )
+            return self._merge_delta(Q, p, k, ids, dists, n_p, iters, n_b,
+                                     hops, base_p, frac)
+        # vector p over one homogeneous base: the traced-p program + the
+        # per-row base-metric skip mask, exactly as _search_mixed runs it
+        ids, dists, n_p, iters, frac = verify_candidates(
+            Q, cand_ids, self.X, p, k, kappa, prm.tau,
+            interpret=prm.interpret, cand_base=cand_dists, base_p=base_p,
+            abandon=prm.abandon, block_d=prm.abandon_block_d,
+        )
+        ids, dists, n_p, frac = mask_base_rows(
+            cand_ids, cand_dists, ids, dists, n_p, p, base_p, k,
+            n_dim_frac=frac)
+        p_arr = np.broadcast_to(np.asarray(p, np.float32).reshape(-1),
+                                (int(Q.shape[0]),))
+        return self._merge_delta(Q, p_arr, k, ids, dists, n_p, iters, n_b,
+                                 hops, base_p, frac)
 
     def _segment_candidates(self, arrays, Q):
         """Vmapped per-segment beam search + one-sort merge (DESIGN.md §3)."""

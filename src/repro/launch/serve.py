@@ -70,7 +70,7 @@ def serve_retrieval(args) -> int:
     st = service.stats
     lat = service.latency_summary()
     print(f"served {len(out)} mixed-p requests in {dt:.1f}s "
-          f"({len(out) / dt:.0f} qps, {st['batches']} padded buckets, "
+          f"({len(out) / dt:.0f} qps, {st['batches']} ladder waves, "
           f"queue peak {st['queue_peak']}); "
           f"avg N_b={st['n_b'] / len(reqs):.0f} "
           f"N_p={st['n_p'] / len(reqs):.0f} "
@@ -79,6 +79,21 @@ def serve_retrieval(args) -> int:
           f"dim-scan="
           f"{st['dim_frac_w'] / st['n_p'] if st['n_p'] else 1.0:.2f}; "
           f"latency p50={lat['p50']:.0f}ms p95={lat['p95']:.0f}ms")
+    # engine scheduling outcomes (DESIGN.md §6): why batches dispatched,
+    # what admission control did, and where each request's time went
+    fl = st["flushes"]
+    print(f"  flushes: full={fl['full']} deadline={fl['deadline']} "
+          f"drain={fl['drain']}; shed={st['shed']} "
+          f"degraded={st['degraded']} padded_rows={st['padded_rows']}")
+    qm, cm = lat.get("queue_ms") or {}, lat.get("compute_ms") or {}
+    if qm and cm:
+        warm = lat.get("warm") or {}
+        warm_txt = (f", warm-only p50={warm['p50']:.0f}ms "
+                    f"p95={warm['p95']:.0f}ms" if warm else "")
+        print(f"  latency split: queue-wait p50={qm['p50']:.0f}ms "
+              f"p95={qm['p95']:.0f}ms | device-compute p50={cm['p50']:.0f}ms "
+              f"p95={cm['p95']:.0f}ms | {lat['cold_count']} requests rode a "
+              f"first-compile batch shape{warm_txt}")
     for name, pb in st["per_base"].items():
         if pb["queries"]:
             print(f"  {name}: {pb['queries']} queries / {pb['batches']} "

@@ -1,0 +1,310 @@
+"""Continuous-batching serving engine (DESIGN.md §6).
+
+`ServingEngine` is the latency-first replacement for the v1 synchronous
+micro-batching scheduler (`UniversalVectorService.serve_v1`): requests
+are admitted into (base, k, exact) buckets, buckets flush when FULL or
+when their oldest request's DEADLINE expires (injectable clock — tests
+and simulated-time benchmarks never sleep), flushes are cut into
+exact-fit half-octave ladder waves, and waves flow through the two-stage
+search/verify pipeline with a one-wave lookahead: wave N+1's base-graph
+search is dispatched before wave N's verification is materialized.
+
+Results are bitwise-identical to `serve_grouped` and `serve_v1` for the
+same request set: every wave runs the same traced-p (verify lane) or
+scalar-base (exact lane) programs, and per-row results are invariant to
+batch composition (tests/test_mixed_p.py pins this).
+
+The engine shares the service's stats dict (`default_stats` is the one
+schema both write): Eq. 1 counters, per-base/per-p attribution, flush
+reasons, shed/degraded counts, and per-request latency records that
+separate queue-wait from device-compute and flag cold (first-compile)
+program shapes.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.core.metrics import base_metric_for
+from repro.retrieval.engine.pipeline import TwoStagePipeline, Wave, make_waves
+from repro.retrieval.engine.request import SHED as STAGE_SHED
+from repro.retrieval.engine.request import EngineRequest
+from repro.retrieval.engine.scheduler import (
+    DEADLINE,
+    DEGRADE,
+    DRAIN,
+    FULL,
+    SHED,
+    BucketScheduler,
+    EnginePolicy,
+    Flush,
+    ManualClock,
+    bucket_ladder,
+    chunk_plan,
+)
+
+__all__ = [
+    "ServingEngine", "EnginePolicy", "EngineRequest", "BucketScheduler",
+    "TwoStagePipeline", "Wave", "Flush", "ManualClock", "bucket_ladder",
+    "chunk_plan", "make_waves", "default_stats",
+    "FULL", "DEADLINE", "DRAIN", "SHED", "DEGRADE",
+]
+
+
+def default_stats() -> dict:
+    """The serving stats schema (shared by the engine and the v1 path)."""
+    return {
+        "queries": 0, "batches": 0, "inserts": 0, "compactions": 0,
+        "n_b": 0.0, "n_p": 0.0,      # aggregate Eq. 1 counters
+        # N_p-weighted scanned-dimension work (DESIGN.md §8): the
+        # early-abandoning verify buckets report effective T_p as
+        # dim_frac_w / n_p (1.0 = full-dimension scans everywhere)
+        "dim_frac_w": 0.0,
+        "padded_rows": 0,            # bucket-padding rows executed
+        "queue_peak": 0,             # high-water queue depth
+        # engine scheduling outcomes
+        "flushes": {FULL: 0, DEADLINE: 0, DRAIN: 0},
+        "shed": 0,                   # admission control: rejected
+        "degraded": 0,               # admission control: exact-base lane
+        # attribution: one bucket per base graph and one per distinct
+        # requested p, each with its own Eq. 1 split
+        "per_base": {
+            "G1": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
+                   "dim_frac_w": 0.0},
+            "G2": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
+                   "dim_frac_w": 0.0},
+        },
+        "per_p": {},                 # "%g" % p -> {queries, n_b, n_p}
+        # per-request latency; bounded so a long-running service cannot
+        # grow it without limit (latency_summary reports over the window).
+        # latency_ms holds total ms (back-compat); latency_records holds
+        # (total_ms, queue_ms, compute_ms, cold) per request — the
+        # attribution fix: queue-wait vs device-compute vs first-call
+        # compile are separable.
+        "latency_ms": deque(maxlen=10_000),
+        "latency_records": deque(maxlen=10_000),
+    }
+
+
+class ServingEngine:
+    """The continuous-batching loop: admit -> (poll-flush -> pipeline) ->
+    collect, against an injectable clock.
+
+    Drive it either offline (`serve(reqs)` = admit + drain) or
+    incrementally (`admit` as requests arrive, `pump()` per tick to
+    dispatch full/deadline flushes, `drain()` to finish the stream).
+    `stats` may be a shared dict (the service passes its own) or None
+    for a private one.
+    """
+
+    def __init__(self, index, policy: EnginePolicy | None = None,
+                 clock=None, stats: dict | None = None):
+        self.index = index
+        self.policy = policy or EnginePolicy()
+        self.clock = clock if clock is not None else time.perf_counter
+        self.sched = BucketScheduler(self.policy, self.clock)
+        self.pipeline = TwoStagePipeline(index)
+        self.stats = stats if stats is not None else default_stats()
+        self._inflight: Wave | None = None     # dispatched, not collected
+        self._results: dict[int, tuple] = {}
+        self._seen_shapes: set[tuple] = set()  # cold-program detection
+
+    # -- admission -----------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        """Requests inside the engine: queued + in the pipeline."""
+        inflight = self._inflight.n_real if self._inflight is not None else 0
+        return self.sched.depth + inflight
+
+    def make_request(self, r, now: float | None = None) -> EngineRequest:
+        """Wrap a service QueryRequest with engine scheduling metadata."""
+        now = self.clock() if now is None else now
+        p = float(r.p)
+        base = base_metric_for(p, self.index.params.cutoff)
+        return EngineRequest(
+            vector=np.asarray(r.vector, np.float32).reshape(-1),
+            p=p, k=int(r.k),
+            request_id=r.request_id, base=float(base), exact=p == base,
+            arrival_t=now,
+            deadline_t=now + self.policy.max_wait_ms / 1e3,
+        )
+
+    def admit(self, requests: list[EngineRequest]) -> list[EngineRequest]:
+        """Admission control + enqueue. Returns the admitted subset —
+        above the watermark the overload policy sheds the request (no
+        response, counted) or degrades it onto the exact-base fast lane
+        (approximate base-metric response, counted)."""
+        admitted = []
+        for r in requests:
+            if self.sched.over_watermark():
+                if self.policy.overload == SHED:
+                    r.stage = STAGE_SHED
+                    self.stats["shed"] += 1
+                    continue
+                if not r.exact:  # DEGRADE: short-circuit past verification
+                    r.exact = True
+                    r.degraded = True
+                    self.stats["degraded"] += 1
+            self.sched.admit(r)
+            admitted.append(r)
+        self.stats["queue_peak"] = max(self.stats["queue_peak"],
+                                       self.sched.depth)
+        return admitted
+
+    # -- the serving loop ----------------------------------------------------
+
+    def pump(self, now: float | None = None) -> None:
+        """Dispatch every flush that is due (full buckets + expired
+        deadlines) through the pipeline, then finish whatever is left in
+        flight: the one-wave lookahead only helps while another wave is
+        ready to overlap with, and holding a dispatched wave for a
+        *future* arrival would charge that wave the inter-arrival gap —
+        exactly what a latency-first engine must not do."""
+        flushes = self.sched.poll(now)
+        while flushes:
+            self._run(flushes)
+            flushes = self.sched.poll(now)
+        self._finish_inflight()
+
+    def drain(self, now: float | None = None) -> dict[int, tuple]:
+        """Flush everything queued, finish the pipeline, and hand back
+        all results accumulated since the last drain."""
+        self._run(self.sched.poll(now))          # due flushes keep their
+        self._run(self.sched.flush_all(now))     # full/deadline reasons
+        self._finish_inflight()
+        out, self._results = self._results, {}
+        return out
+
+    def serve(self, requests: list[EngineRequest]) -> dict[int, tuple]:
+        self.admit(requests)
+        return self.drain()
+
+    def take_results(self) -> dict[int, tuple]:
+        """Hand over results collected so far without flushing anything —
+        the incremental (admit/pump) driving mode's harvest step."""
+        out, self._results = self._results, {}
+        return out
+
+    def warmup(self, k: int = 10,
+               ps: tuple[float, ...] = (0.8, 1.8)) -> int:
+        """Boot-time pre-compilation: serve one synthetic batch of every
+        ladder size for each lane the given p values map to, so steady
+        traffic never rides a compiling program. The ladder is a fixed
+        finite set — this is the structural advantage over
+        data-dependent-shape scheduling, made explicit as a one-time
+        step. Verify lanes share one traced-p program family per (base,
+        k, size), so one verify p per base covers *any* metric mix;
+        exact-base p values compile per scalar p and should be listed
+        explicitly if the traffic is known to contain them. Served
+        counters/latency stats are left untouched (the shapes do land in
+        the cold-detection set). Returns device batches executed."""
+        zero = np.zeros(self.index.dim, np.float32)
+        keep_stats, self.stats = self.stats, default_stats()
+        keep_results, self._results = self._results, {}
+        batches = 0
+        try:
+            for p in dict.fromkeys(float(p) for p in ps):
+                for size in self.policy.ladder:
+                    for i in range(size):
+                        r = SimpleNamespace(vector=zero, p=p, k=k,
+                                            request_id=-(i + 1))
+                        self.sched.admit(self.make_request(r))
+                    self.drain()
+                    batches += 1
+        finally:
+            self.stats = keep_stats
+            self._results = keep_results
+        return batches
+
+    def _run(self, flushes: list[Flush]) -> None:
+        waves: list[Wave] = []
+        for fl in flushes:
+            self.stats["flushes"][fl.reason] += 1
+            waves.extend(make_waves(fl, self.policy.ladder))
+        for i, wave in enumerate(waves):
+            try:
+                self._advance(wave)
+            except Exception as e:
+                # every unserved request — the failing wave's (and the
+                # uncollected predecessor's), plus all not-yet-dispatched
+                # waves — goes back to the FRONT of its bucket in FIFO
+                # order; responses already computed ride on the exception
+                unserved = list(getattr(e, "_unserved", []))
+                unserved += [r for w in waves[i + 1:] for r in w.requests]
+                self._fail(e, unserved)
+
+    def _advance(self, wave: Wave) -> None:
+        """One pipeline step: dispatch A(N), collect B(N-1), dispatch
+        B(N). The collect sits *between* the dispatches so wave N's base
+        search is already enqueued while wave N-1's verify materializes.
+        """
+        prev, self._inflight = self._inflight, None
+        try:
+            self.pipeline.dispatch_search(wave)
+            if prev is not None:
+                self._collect(prev)
+                prev = None
+            self.pipeline.dispatch_finish(wave)
+        except Exception as e:
+            pending = list(prev.requests) if prev is not None else []
+            e._unserved = pending + list(wave.requests)
+            raise
+        self._inflight = wave
+
+    def _finish_inflight(self) -> None:
+        wave, self._inflight = self._inflight, None
+        if wave is None:
+            return
+        try:
+            self._collect(wave)
+        except Exception as e:
+            self._fail(e, list(wave.requests))
+
+    def _fail(self, e: Exception, unserved: list[EngineRequest]):
+        self.sched.requeue(unserved)
+        partial = dict(getattr(e, "partial_results", {}))
+        partial.update(self._results)
+        e.partial_results = partial
+        self._results = {}
+        raise e
+
+    # -- collection + stats --------------------------------------------------
+
+    def _collect(self, wave: Wave) -> None:
+        ids, dists, n_b, n_p, frac = self.pipeline.collect(wave)
+        done = self.clock()
+        shape_key = (wave.base, wave.k, wave.exact, wave.size)
+        cold = shape_key not in self._seen_shapes
+        self._seen_shapes.add(shape_key)
+        frac_w = float((frac * n_p).sum())
+        st = self.stats
+        st["queries"] += wave.n_real
+        st["batches"] += 1
+        st["padded_rows"] += wave.padded_rows
+        st["n_b"] += float(n_b.sum())
+        st["n_p"] += float(n_p.sum())
+        st["dim_frac_w"] += frac_w
+        pb = st["per_base"]["G1" if wave.base == 1.0 else "G2"]
+        pb["queries"] += wave.n_real
+        pb["batches"] += 1
+        pb["n_b"] += float(n_b.sum())
+        pb["n_p"] += float(n_p.sum())
+        pb["dim_frac_w"] += frac_w
+        for i, r in enumerate(wave.requests):
+            r.finish_t = done
+            self._results[r.request_id] = (ids[i], dists[i])
+            pp = st["per_p"].setdefault(
+                "%g" % r.p, {"queries": 0, "n_b": 0.0, "n_p": 0.0})
+            pp["queries"] += 1
+            pp["n_b"] += float(n_b[i])
+            pp["n_p"] += float(n_p[i])
+            total = (done - r.arrival_t) * 1e3
+            queue = max(r.flush_t - r.arrival_t, 0.0) * 1e3
+            compute = max(done - r.flush_t, 0.0) * 1e3
+            st["latency_ms"].append(total)
+            st["latency_records"].append((total, queue, compute, cold))

@@ -44,6 +44,7 @@ import numpy as np
 from repro.core.metrics import base_metric_for
 from repro.core.uhnsw import UHNSW, UHNSWParams
 from repro.index.sharded import ShardedUHNSW
+from repro.retrieval.engine import EnginePolicy, ServingEngine, default_stats
 
 
 class QueueFull(RuntimeError):
@@ -75,30 +76,8 @@ class InsertRequest:
     request_id: int = 0
 
 
-def _empty_stats() -> dict:
-    return {
-        "queries": 0, "batches": 0, "inserts": 0, "compactions": 0,
-        "n_b": 0.0, "n_p": 0.0,      # aggregate Eq. 1 counters
-        # N_p-weighted scanned-dimension work (DESIGN.md §8): the
-        # early-abandoning verify buckets report effective T_p as
-        # dim_frac_w / n_p (1.0 = full-dimension scans everywhere)
-        "dim_frac_w": 0.0,
-        "padded_rows": 0,            # bucket-padding rows executed
-        "queue_peak": 0,             # high-water queue depth
-        # attribution (the ISSUE's stats fix): one bucket per base graph
-        # and one per distinct requested p, each with its own Eq. 1 split
-        "per_base": {
-            "G1": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
-                   "dim_frac_w": 0.0},
-            "G2": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
-                   "dim_frac_w": 0.0},
-        },
-        "per_p": {},                 # "%g" % p -> {queries, n_b, n_p}
-        # per-request submit->response latency; bounded so a long-running
-        # service cannot grow it without limit (latency_summary reports
-        # over the most recent window)
-        "latency_ms": deque(maxlen=10_000),
-    }
+# one stats schema for both serve paths — see engine.default_stats
+_empty_stats = default_stats
 
 
 @dataclass
@@ -133,11 +112,36 @@ class UniversalVectorService:
     max_verify_batch: int = 32
     min_bucket: int = 8
     queue_capacity: int = 4096
+    # engine scheduling knobs (repro.retrieval.engine): deadline-flush
+    # max-wait, admission-control watermark + overload policy, and the
+    # injectable clock every deadline decision is made against (None ->
+    # time.perf_counter; tests pass engine.ManualClock and never sleep)
+    max_wait_ms: float = 2.0
+    watermark: int | None = None
+    overload: str = "shed"
+    clock: object = None
     stats: dict = field(default_factory=_empty_stats)
 
     def __post_init__(self):
         assert self.min_bucket >= 1 and self.max_batch >= self.min_bucket
         self._queue: deque = deque()  # (QueryRequest, enqueue_time)
+        self._engine: ServingEngine | None = None
+        self._seen_shapes: set = set()  # v1 cold-program detection
+
+    @property
+    def engine(self) -> ServingEngine:
+        """The continuous-batching engine behind `serve` (lazy: the v1
+        submit/drain path never constructs it)."""
+        if self._engine is None:
+            policy = EnginePolicy(
+                max_batch=self.max_batch, min_bucket=self.min_bucket,
+                max_wait_ms=self.max_wait_ms,
+                queue_capacity=self.queue_capacity,
+                watermark=self.watermark, overload=self.overload,
+            )
+            self._engine = ServingEngine(self.index, policy,
+                                         clock=self.clock, stats=self.stats)
+        return self._engine
 
     # -- construction -------------------------------------------------------
 
@@ -206,29 +210,43 @@ class UniversalVectorService:
 
     # -- the micro-batching scheduler ---------------------------------------
 
+    def _validate(self, requests: list[QueryRequest]) -> None:
+        """Reject malformed requests before ANY of the batch is accepted:
+        p outside the universal range (NaN included), k < 1, a vector of
+        the wrong dimensionality (reported as expected vs actual d), or a
+        non-finite vector — so a malformed request can never reach (and
+        abort) a device batch it shares with healthy ones."""
+        dim = int(self.index.X.shape[1])
+        for r in requests:
+            base_metric_for(float(r.p))  # range-validates p (NaN included)
+            if int(r.k) < 1:
+                raise ValueError(
+                    f"request {r.request_id}: k must be >= 1, got {r.k}")
+            v = np.asarray(r.vector)
+            if v.size != dim:
+                raise ValueError(
+                    f"request {r.request_id}: dimension mismatch — "
+                    f"expected d={dim}, got d={v.size}"
+                )
+            if not np.all(np.isfinite(v)):
+                raise ValueError(
+                    f"request {r.request_id}: vector has non-finite "
+                    f"entries (NaN/Inf)"
+                )
+
     def submit(self, requests: list[QueryRequest]) -> None:
         """Enqueue requests into the bounded FIFO queue.
 
         Raises QueueFull if the batch would exceed `queue_capacity` (no
-        partial enqueue), ValueError for a p outside the universal range
-        or a vector of the wrong dimensionality — all *before* any request
-        of the batch is accepted, so a malformed request can never reach
-        (and abort) a device batch it shares with healthy ones.
+        partial enqueue) or ValueError for a malformed request (see
+        `_validate`) — all *before* any request of the batch is accepted.
         """
         if len(self._queue) + len(requests) > self.queue_capacity:
             raise QueueFull(
                 f"queue at {len(self._queue)}/{self.queue_capacity}; "
                 f"cannot accept {len(requests)} more"
             )
-        dim = int(self.index.X.shape[1])
-        for r in requests:
-            base_metric_for(float(r.p))  # range-validates p (NaN included)
-            v = np.asarray(r.vector)
-            if v.size != dim:
-                raise ValueError(
-                    f"request {r.request_id}: vector has {v.size} elements, "
-                    f"index dimension is {dim}"
-                )
+        self._validate(requests)
         now = time.perf_counter()
         for r in requests:
             self._queue.append((r, now))
@@ -301,6 +319,7 @@ class UniversalVectorService:
         exact=True means every row's p equals the base metric — the call
         drops to the scalar skip path (no verification program at all).
         """
+        t_start = time.perf_counter()
         n_real = len(chunk)
         size = self._bucket_size(n_real, cap)
         reqs = [r for r, _ in chunk]
@@ -324,6 +343,9 @@ class UniversalVectorService:
         frac = frac[:n_real] if frac.ndim else np.full(n_real, float(frac))
         frac_w = float((frac * n_p).sum())
         done = time.perf_counter()
+        shape_key = (base, k, exact, size)
+        cold = shape_key not in self._seen_shapes
+        self._seen_shapes.add(shape_key)
         st = self.stats
         st["queries"] += n_real
         st["batches"] += 1
@@ -345,16 +367,58 @@ class UniversalVectorService:
             pp["n_b"] += float(n_b[i])
             pp["n_p"] += float(n_p[i])
             st["latency_ms"].append((done - t0) * 1e3)
+            st["latency_records"].append((
+                (done - t0) * 1e3,            # total
+                max(t_start - t0, 0.0) * 1e3,  # queue-wait
+                (done - t_start) * 1e3,        # device-compute
+                cold,
+            ))
 
     def serve(self, requests: list[QueryRequest]) -> dict[int, tuple]:
-        """Serve a mixed-p request list: submit + drain, in waves sized to
+        """Serve a mixed-p request list through the continuous-batching
+        engine (DESIGN.md §6) — the default serve path since the engine
+        PR; `serve_v1` keeps the synchronous submit/drain scheduler as a
+        bit-identical baseline.
+
+        Anything already queued via `submit` migrates into the engine
+        first (FIFO, original enqueue timestamps preserved), then the
+        request list is admitted in waves sized to the queue's remaining
+        capacity, so arbitrarily long lists never trip the bound. Returns
+        request_id -> (ids (k,) int32, rooted dists (k,) f32); requests
+        shed by admission control (watermark + overload="shed") have no
+        entry. If a wave fails (bad request, device error), responses
+        already computed ride on the exception as `partial_results`."""
+        eng = self.engine
+        out: dict[int, tuple] = {}
+        i = 0
+        try:
+            while i < len(requests) or self._queue or eng.pending:
+                while self._queue:  # migrate pre-queued v1 submissions
+                    r, t0 = self._queue.popleft()
+                    eng.admit([eng.make_request(r, now=t0)])
+                room = self.queue_capacity - eng.pending
+                if room > 0 and i < len(requests):
+                    wave = requests[i:i + room]
+                    self._validate(wave)
+                    eng.admit([eng.make_request(r) for r in wave])
+                    i += len(wave)
+                out.update(eng.drain())
+        except Exception as e:
+            out.update(getattr(e, "partial_results", {}))
+            e.partial_results = out
+            raise
+        return out
+
+    def serve_v1(self, requests: list[QueryRequest]) -> dict[int, tuple]:
+        """The v1 synchronous scheduler: submit + drain, in waves sized to
         the queue's *remaining* capacity, so arbitrarily long lists never
         trip the bound — even when other requests were already queued via
         `submit` (those are served too, FIFO, and their responses are
-        included in the returned dict, as with any `drain`). Returns
-        request_id -> (ids (k,) int32, rooted dists (k,) f32). If a wave
-        fails (bad request, device error), responses already computed ride
-        on the exception as `partial_results`."""
+        included in the returned dict, as with any `drain`). Kept as the
+        engine's bit-identical correctness/latency baseline
+        (benchmarks/serving.py). Returns request_id -> (ids, dists); on
+        failure, computed responses ride on the exception as
+        `partial_results`."""
         out: dict[int, tuple] = {}
         i = 0
         try:
@@ -409,16 +473,48 @@ class UniversalVectorService:
     # -- stats ---------------------------------------------------------------
 
     def latency_summary(self) -> dict:
-        """Mean / p50 / p95 / max request latency (ms) over the most recent
-        window (the backing buffer keeps the last 10k requests)."""
+        """Request-latency summary over the most recent window (the
+        backing buffers keep the last 10k requests).
+
+        Beyond the total-latency percentiles, the summary *attributes*
+        each request's time (the ISSUE's accounting fix): `queue_ms` is
+        admission -> dispatch wait, `compute_ms` is dispatch -> host
+        materialization, `cold_count` is how many requests rode a batch
+        shape's first (compiling) execution, and `warm` re-reports the
+        total-latency percentiles over non-cold requests only — so a
+        7-second first-call compile can never masquerade as steady-state
+        serving latency again."""
         lat = np.asarray(self.stats["latency_ms"], dtype=np.float64)
         if lat.size == 0:
             return {"count": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
-                    "max": 0.0}
-        return {
+                    "max": 0.0, "queue_ms": {}, "compute_ms": {},
+                    "cold_count": 0, "warm": {}}
+        out = {
             "count": int(lat.size),
             "mean": float(lat.mean()),
             "p50": float(np.percentile(lat, 50)),
             "p95": float(np.percentile(lat, 95)),
             "max": float(lat.max()),
         }
+        recs = list(self.stats["latency_records"])
+        if recs:
+            arr = np.asarray([r[:3] for r in recs], dtype=np.float64)
+            cold = np.asarray([bool(r[3]) for r in recs])
+            for name, col in (("queue_ms", arr[:, 1]),
+                              ("compute_ms", arr[:, 2])):
+                out[name] = {
+                    "mean": float(col.mean()),
+                    "p50": float(np.percentile(col, 50)),
+                    "p95": float(np.percentile(col, 95)),
+                }
+            out["cold_count"] = int(cold.sum())
+            warm = arr[~cold, 0]
+            out["warm"] = {} if warm.size == 0 else {
+                "count": int(warm.size),
+                "p50": float(np.percentile(warm, 50)),
+                "p95": float(np.percentile(warm, 95)),
+            }
+        else:
+            out["queue_ms"], out["compute_ms"] = {}, {}
+            out["cold_count"], out["warm"] = 0, {}
+        return out

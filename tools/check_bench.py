@@ -41,6 +41,8 @@ ROOT = Path(__file__).resolve().parents[1]
 _RECALL_BAND = (0.0, 0.02)     # 2 pt absolute
 _RATIO_BAND = (0.20, 0.0)      # the 20% regression budget
 _COLD_BAND = (0.40, 0.0)       # cold ratios include jit compiles: noisy
+_LAT_BAND = (0.25, 0.05)       # same-machine latency ratios (p50)
+_LAT95_BAND = (0.35, 0.10)     # tail latency: noisier than the median
 
 SPECS = {
     "build": {
@@ -61,6 +63,11 @@ SPECS = {
             "hops_speedup_vs_w1": ("higher", _RATIO_BAND),
         },
     },
+    # serving gates both throughput (engine-vs-grouped speedups) and the
+    # paced open-loop latency comparison against the v1 scheduler: the
+    # p50/p95 ratios are same-machine, same-stream ratios (engine /
+    # v1 — lower is better, < 1 means the engine is faster), so they are
+    # machine-portable where absolute milliseconds are not.
     "serving": {
         "keys": ("dataset", "distinct_p", "k"),
         "metrics": {
@@ -68,6 +75,8 @@ SPECS = {
             "speedup_warm": ("higher", (0.25, 0.0)),
             "speedup_cold": ("higher", _COLD_BAND),
             "bitwise_equal": ("bool-true", None),
+            "p50_vs_v1": ("lower", _LAT_BAND),
+            "p95_vs_v1": ("lower", _LAT95_BAND),
         },
     },
     # early-abandoning verification (DESIGN.md §8): the scanned-dimension
@@ -230,8 +239,10 @@ def _degrade(payload: dict, factor: float) -> dict:
 
 
 def selftest(baseline_dir: Path, benches: list[str]) -> int:
-    """The gate must (a) pass a baseline against itself and (b) fail once a
-    25% regression is injected into every gated metric."""
+    """The gate must (a) pass a baseline against itself, (b) fail once a
+    25% regression is injected into every gated metric, and (c) fail when
+    *only* the serving p50 latency ratio regresses — proving the latency
+    gate trips on its own, not just riding along with the others."""
     import tempfile
 
     found = [n for n in benches
@@ -240,7 +251,8 @@ def selftest(baseline_dir: Path, benches: list[str]) -> int:
         print(f"selftest: no BENCH_*.json under {baseline_dir}")
         return 1
     with tempfile.TemporaryDirectory() as td:
-        tmp = Path(td)
+        tmp = Path(td) / "all"
+        tmp.mkdir()
         for n in found:
             payload = _load(baseline_dir / f"BENCH_{n}.json")
             (tmp / f"BENCH_{n}.json").write_text(
@@ -253,8 +265,30 @@ def selftest(baseline_dir: Path, benches: list[str]) -> int:
         if run_check(baseline_dir, tmp, found) == 0:
             print("selftest FAIL: 25% regression slipped through the gate")
             return 1
+        if "serving" in found:
+            payload = _load(baseline_dir / "BENCH_serving.json")
+            p50only = json.loads(json.dumps(payload))
+            touched = 0
+            for row in p50only.get("rows", []):
+                if "p50_vs_v1" in row:
+                    row["p50_vs_v1"] = round(
+                        float(row["p50_vs_v1"]) * 1.5, 4)
+                    touched += 1
+            if not touched:
+                print("selftest FAIL: serving baseline has no p50_vs_v1 "
+                      "rows to regress — latency gate untestable")
+                return 1
+            tmp50 = Path(td) / "p50"
+            tmp50.mkdir()
+            (tmp50 / "BENCH_serving.json").write_text(json.dumps(p50only))
+            print("selftest phase 3: injected p50-only serving latency "
+                  "regression (must fail)")
+            if run_check(baseline_dir, tmp50, ["serving"]) == 0:
+                print("selftest FAIL: a 1.5x p50 latency regression "
+                      "slipped through the serving gate")
+                return 1
     print("selftest PASS: gate is live (self-compare clean, 25% regression "
-          "caught)")
+          "caught, p50-only latency regression caught)")
     return 0
 
 
