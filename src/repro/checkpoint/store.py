@@ -25,6 +25,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from pathlib import Path
 
 import jax
@@ -108,28 +109,69 @@ def save_checkpoint(directory, step: int, tree, *, _blocking: bool = True):
     return final
 
 
-def latest_step(directory) -> int | None:
+def _list_steps(directory) -> list[int]:
     directory = Path(directory)
     if not directory.exists():
-        return None
-    steps = [
+        return []
+    return sorted(
         int(p.name.split("_")[1])
         for p in directory.iterdir()
         if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(directory) -> int | None:
+    steps = _list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _read_manifest(src: Path) -> dict:
+    """Load + structurally validate one step's manifest. Raises ValueError
+    on anything a crash could have left behind (missing file, truncated
+    JSON, wrong structure)."""
+    try:
+        manifest = json.loads((src / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ValueError(f"{src}: unreadable manifest ({e})") from e
+    if not isinstance(manifest, dict) or "arrays" not in manifest \
+            or "shards" not in manifest:
+        raise ValueError(f"{src}: manifest is not a checkpoint manifest")
+    return manifest
 
 
 def restore_checkpoint(directory, skeleton, shardings, step: int | None = None):
     """Restore onto `shardings` (which may target a *different* mesh than the
-    checkpoint was written from — elastic restart)."""
+    checkpoint was written from — elastic restart).
+
+    With step=None, the newest *durable* step wins: a directory whose
+    manifest is missing or invalid (a crash landed between partial file
+    writes and the atomic rename being observed, or post-crash corruption)
+    is skipped with a warning and restore falls back to the previous step,
+    instead of trusting the newest name blindly. An explicitly requested
+    step is never second-guessed — corruption there raises.
+    """
     directory = Path(directory)
     if step is None:
-        step = latest_step(directory)
-        if step is None:
+        candidates = _list_steps(directory)
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints under {directory}")
-    src = directory / f"step_{step:08d}"
-    manifest = json.loads((src / "manifest.json").read_text())
+        manifest = None
+        for cand in reversed(candidates):
+            try:
+                manifest = _read_manifest(directory / f"step_{cand:08d}")
+                step = cand
+                break
+            except ValueError as e:
+                warnings.warn(f"skipping non-durable checkpoint: {e}",
+                              stacklevel=2)
+        if manifest is None:
+            raise FileNotFoundError(
+                f"no durable checkpoint under {directory}: every step_* "
+                f"directory has a missing/invalid manifest")
+        src = directory / f"step_{step:08d}"
+    else:
+        src = directory / f"step_{step:08d}"
+        manifest = json.loads((src / "manifest.json").read_text())
     payloads = {}
     for f in src.glob("host_*_shards.npz"):
         payloads[f.name] = np.load(f)

@@ -6,8 +6,21 @@
             merge, a single verify_candidates pass (paper N_p preserved)
   delta   — mutable delta buffer for online add(): brute-force exact-Lp
             scan merged into graph results; compaction -> new frozen segment
+  persist — atomic CRC-checked snapshots + recovery (DESIGN.md §9):
+            recover(dir) = last durable snapshot + WAL replay, bit-identical
+  wal     — fsync'd CRC-framed write-ahead log for delta-tier inserts
 """
 
 from repro.index.delta import DeltaBuffer  # noqa: F401
+from repro.index.persist import (  # noqa: F401
+    DurableIndex,
+    RecoveryError,
+    SnapshotError,
+    latest_durable_snapshot,
+    load_snapshot,
+    recover,
+    save_snapshot,
+)
 from repro.index.segment import SegmentedGraphs, build_segments, partition_dataset  # noqa: F401
 from repro.index.sharded import ShardedUHNSW  # noqa: F401
+from repro.index.wal import WalCorruption, WriteAheadLog, replay  # noqa: F401

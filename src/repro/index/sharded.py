@@ -122,6 +122,10 @@ class ShardedUHNSW:
         self._next_id = len(self._X_host)
         self._rt = None  # set by shard_over; re-applied after compaction
         self._build_method = None  # compaction builder; None = auto by size
+        # durability hook (repro.index.persist.DurableIndex): called after a
+        # compaction commits, when the delta is empty — the cheap moment to
+        # rotate the snapshot + WAL pair. None = no durability layer.
+        self.on_compact = None
 
     # -- construction -------------------------------------------------------
 
@@ -416,3 +420,5 @@ class ShardedUHNSW:
         self.X = jnp.asarray(self._X_host)
         if self._rt is not None:  # restacking dropped the device placement
             self.shard_over(self._rt)
+        if self.on_compact is not None:
+            self.on_compact()

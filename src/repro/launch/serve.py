@@ -51,10 +51,35 @@ def serve_lm(args) -> int:
 def serve_retrieval(args) -> int:
     from repro.core.datasets import make_dataset
     from repro.core.uhnsw import UHNSWParams
+    from repro.index.persist import DurableIndex, latest_durable_snapshot
+    from repro.index.sharded import ShardedUHNSW
+    from repro.retrieval.engine import FaultInjector
     from repro.retrieval.service import QueryRequest, UniversalVectorService
 
+    # chaos rehearsal (DESIGN.md §9): a seeded injector at the engine's
+    # device-call boundary; 0.0 leaves the happy path untouched
+    injector = FaultInjector(rate=args.fault_rate, seed=args.fault_seed) \
+        if args.fault_rate > 0 else None
     ds = make_dataset("deep", n=args.n, n_queries=128, seed=args.seed)
-    service = UniversalVectorService.build(ds.data, UHNSWParams(t=200), m=16)
+    params = UHNSWParams(t=200)
+    if args.state_dir:
+        # durable lifecycle: recover an existing state dir (snapshot + WAL
+        # replay, bit-identical) or snapshot a fresh build into it
+        if latest_durable_snapshot(args.state_dir) is not None:
+            index = DurableIndex.recover(args.state_dir, params=params)
+            print(f"recovered durable index from {args.state_dir}: "
+                  f"n={index.n}, {index.num_segments} segments, "
+                  f"{len(index.delta)} delta-resident inserts")
+        else:
+            index = DurableIndex.create(
+                ShardedUHNSW.build(ds.data, m=16, params=params),
+                args.state_dir)
+            print(f"created durable index at {args.state_dir}: n={index.n}")
+        service = UniversalVectorService(index=index,
+                                         fault_injector=injector)
+    else:
+        service = UniversalVectorService.build(ds.data, params, m=16,
+                                               fault_injector=injector)
     rng = np.random.default_rng(args.seed)
     reqs = [
         QueryRequest(
@@ -85,6 +110,18 @@ def serve_retrieval(args) -> int:
     print(f"  flushes: full={fl['full']} deadline={fl['deadline']} "
           f"drain={fl['drain']}; shed={st['shed']} "
           f"degraded={st['degraded']} padded_rows={st['padded_rows']}")
+    # fault tolerance (DESIGN.md §9): every admitted request ended DONE or
+    # deterministic FAILED; the counters say what the recovery paid
+    failures = service.engine.take_failures()
+    if args.fault_rate > 0 or st["faults"]:
+        print(f"  faults: caught={st['faults']} retries={st['retries']} "
+              f"quarantine_splits={st['quarantine_splits']} "
+              f"failed={st['failed']}"
+              + (f" (injector: rate={args.fault_rate}, "
+                 f"seed={args.fault_seed}, "
+                 f"injected={injector.injected})" if injector else ""))
+        for rid, err in sorted(failures.items())[:5]:
+            print(f"    request {rid} FAILED: {err}")
     qm, cm = lat.get("queue_ms") or {}, lat.get("compute_ms") or {}
     if qm and cm:
         warm = lat.get("warm") or {}
@@ -119,6 +156,14 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--n", type=int, default=5000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="inject transient device-call faults at this "
+                         "rate (seeded, deterministic; DESIGN.md §9)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--state-dir", default=None,
+                    help="durable index state: recover from this directory "
+                         "if it holds a snapshot, else snapshot the fresh "
+                         "build into it (inserts ride the WAL)")
     args = ap.parse_args(argv)
     return serve_retrieval(args) if args.retrieval else serve_lm(args)
 

@@ -19,6 +19,23 @@ schema both write): Eq. 1 counters, per-base/per-p attribution, flush
 reasons, shed/degraded counts, and per-request latency records that
 separate queue-wait from device-compute and flag cold (first-compile)
 program shapes.
+
+Fault tolerance (DESIGN.md §9): every device interaction — stage A/B
+dispatch and host collection — sits behind a fault boundary. A wave that
+raises is retried up to `EnginePolicy.max_retries` times (optionally with
+exponential backoff against the injectable clock), then *bisected*: each
+half gets a fresh retry budget, so a single poison request is isolated in
+O(log n) splits instead of failing its whole wave. A singleton wave that
+exhausts its budget marks its request FAILED (terminal, with the
+exception message) — total device calls are bounded by
+(max_retries+1)·(2n−1), so there are no unbounded retries and no hangs.
+A seeded `FaultInjector` can be threaded through the same boundary to
+rehearse all of this deterministically; with no injector the boundary is
+a single `is not None` check (zero overhead disabled). The engine itself
+is a three-state machine — live → draining (after `close()`) and a
+terminal failed state if the recovery machinery itself breaks — and
+admission into a non-live engine raises `EngineClosed` rather than
+silently queueing.
 """
 
 from __future__ import annotations
@@ -30,7 +47,13 @@ from types import SimpleNamespace
 import numpy as np
 
 from repro.core.metrics import base_metric_for
+from repro.retrieval.engine.faults import (
+    FaultInjector,
+    InjectedFault,
+    InjectedTimeout,
+)
 from repro.retrieval.engine.pipeline import TwoStagePipeline, Wave, make_waves
+from repro.retrieval.engine.request import FAILED as STAGE_FAILED
 from repro.retrieval.engine.request import SHED as STAGE_SHED
 from repro.retrieval.engine.request import EngineRequest
 from repro.retrieval.engine.scheduler import (
@@ -47,12 +70,24 @@ from repro.retrieval.engine.scheduler import (
     chunk_plan,
 )
 
+# engine lifecycle states (satellite: admissions are rejected — not
+# silently queued — once the engine is no longer live)
+LIVE = "live"
+DRAINING = "draining"
+ENGINE_FAILED = "failed"
+
 __all__ = [
     "ServingEngine", "EnginePolicy", "EngineRequest", "BucketScheduler",
     "TwoStagePipeline", "Wave", "Flush", "ManualClock", "bucket_ladder",
     "chunk_plan", "make_waves", "default_stats",
+    "FaultInjector", "InjectedFault", "InjectedTimeout", "EngineClosed",
     "FULL", "DEADLINE", "DRAIN", "SHED", "DEGRADE",
+    "LIVE", "DRAINING", "ENGINE_FAILED",
 ]
+
+
+class EngineClosed(RuntimeError):
+    """Admission attempted on an engine that is draining or failed."""
 
 
 def default_stats() -> dict:
@@ -70,6 +105,11 @@ def default_stats() -> dict:
         "flushes": {FULL: 0, DEADLINE: 0, DRAIN: 0},
         "shed": 0,                   # admission control: rejected
         "degraded": 0,               # admission control: exact-base lane
+        # fault tolerance (DESIGN.md §9)
+        "faults": 0,                 # device-call exceptions caught
+        "retries": 0,                # wave re-executions
+        "quarantine_splits": 0,      # bisections isolating poison requests
+        "failed": 0,                 # requests in terminal FAILED state
         # attribution: one bucket per base graph and one per distinct
         # requested p, each with its own Eq. 1 split
         "per_base": {
@@ -102,15 +142,21 @@ class ServingEngine:
     """
 
     def __init__(self, index, policy: EnginePolicy | None = None,
-                 clock=None, stats: dict | None = None):
+                 clock=None, stats: dict | None = None,
+                 fault_injector: FaultInjector | None = None):
         self.index = index
         self.policy = policy or EnginePolicy()
         self.clock = clock if clock is not None else time.perf_counter
         self.sched = BucketScheduler(self.policy, self.clock)
         self.pipeline = TwoStagePipeline(index)
         self.stats = stats if stats is not None else default_stats()
+        # None = no injection and ZERO overhead: the device-call boundary
+        # is one attribute `is not None` test (the acceptance criterion)
+        self.fault_injector = fault_injector
+        self.state = LIVE
         self._inflight: Wave | None = None     # dispatched, not collected
         self._results: dict[int, tuple] = {}
+        self._failures: dict[int, str] = {}    # request_id -> error message
         self._seen_shapes: set[tuple] = set()  # cold-program detection
 
     # -- admission -----------------------------------------------------------
@@ -121,8 +167,14 @@ class ServingEngine:
         inflight = self._inflight.n_real if self._inflight is not None else 0
         return self.sched.depth + inflight
 
+    def _check_live(self) -> None:
+        if self.state != LIVE:
+            raise EngineClosed(
+                f"engine is {self.state}: not accepting new requests")
+
     def make_request(self, r, now: float | None = None) -> EngineRequest:
         """Wrap a service QueryRequest with engine scheduling metadata."""
+        self._check_live()
         now = self.clock() if now is None else now
         p = float(r.p)
         base = base_metric_for(p, self.index.params.cutoff)
@@ -138,7 +190,11 @@ class ServingEngine:
         """Admission control + enqueue. Returns the admitted subset —
         above the watermark the overload policy sheds the request (no
         response, counted) or degrades it onto the exact-base fast lane
-        (approximate base-metric response, counted)."""
+        (approximate base-metric response, counted). Raises EngineClosed
+        once the engine has left the live state (close() or an engine
+        failure) — a request must never queue into an engine that will
+        not serve it."""
+        self._check_live()
         admitted = []
         for r in requests:
             if self.sched.over_watermark():
@@ -156,6 +212,13 @@ class ServingEngine:
                                        self.sched.depth)
         return admitted
 
+    def submit(self, r, now: float | None = None) -> EngineRequest | None:
+        """Admit ONE service-level request (wrap + admission control).
+        Returns the EngineRequest, or None if the overload policy shed
+        it; raises EngineClosed when the engine is not live."""
+        admitted = self.admit([self.make_request(r, now=now)])
+        return admitted[0] if admitted else None
+
     # -- the serving loop ----------------------------------------------------
 
     def pump(self, now: float | None = None) -> None:
@@ -169,14 +232,14 @@ class ServingEngine:
         while flushes:
             self._run(flushes)
             flushes = self.sched.poll(now)
-        self._finish_inflight()
+        self._settle()
 
     def drain(self, now: float | None = None) -> dict[int, tuple]:
         """Flush everything queued, finish the pipeline, and hand back
         all results accumulated since the last drain."""
         self._run(self.sched.poll(now))          # due flushes keep their
         self._run(self.sched.flush_all(now))     # full/deadline reasons
-        self._finish_inflight()
+        self._settle()
         out, self._results = self._results, {}
         return out
 
@@ -184,11 +247,35 @@ class ServingEngine:
         self.admit(requests)
         return self.drain()
 
+    def close(self, now: float | None = None) -> dict[int, tuple]:
+        """Stop admissions and finish everything queued/in-flight.
+
+        The engine enters DRAINING — terminal: make_request/admit/submit
+        raise EngineClosed from here on (an engine failure leaves it in
+        ENGINE_FAILED, with the same admission behavior). Returns the
+        final batch of results."""
+        if self.state == LIVE:
+            self.state = DRAINING
+        return self.drain(now)
+
     def take_results(self) -> dict[int, tuple]:
         """Hand over results collected so far without flushing anything —
         the incremental (admit/pump) driving mode's harvest step."""
         out, self._results = self._results, {}
         return out
+
+    def take_failures(self) -> dict[int, str]:
+        """Hand over terminally FAILED requests (request_id -> the final
+        exception message) accumulated since the last call. A request is
+        either in a results dict, a failures dict, or was shed — the
+        accounting invariant the chaos tests pin."""
+        out, self._failures = self._failures, {}
+        return out
+
+    @property
+    def failures(self) -> dict[int, str]:
+        """Read-only view of not-yet-harvested terminal failures."""
+        return dict(self._failures)
 
     def warmup(self, k: int = 10,
                ps: tuple[float, ...] = (0.8, 1.8)) -> int:
@@ -206,6 +293,9 @@ class ServingEngine:
         zero = np.zeros(self.index.dim, np.float32)
         keep_stats, self.stats = self.stats, default_stats()
         keep_results, self._results = self._results, {}
+        # warmup is a compile pass, not traffic — never inject faults into
+        # it (and never burn the injector's deterministic draw sequence)
+        keep_inj, self.fault_injector = self.fault_injector, None
         batches = 0
         try:
             for p in dict.fromkeys(float(p) for p in ps):
@@ -219,59 +309,145 @@ class ServingEngine:
         finally:
             self.stats = keep_stats
             self._results = keep_results
+            self.fault_injector = keep_inj
         return batches
 
     def _run(self, flushes: list[Flush]) -> None:
-        waves: list[Wave] = []
+        work: deque[Wave] = deque()
         for fl in flushes:
             self.stats["flushes"][fl.reason] += 1
-            waves.extend(make_waves(fl, self.policy.ladder))
-        for i, wave in enumerate(waves):
-            try:
-                self._advance(wave)
-            except Exception as e:
-                # every unserved request — the failing wave's (and the
-                # uncollected predecessor's), plus all not-yet-dispatched
-                # waves — goes back to the FRONT of its bucket in FIFO
-                # order; responses already computed ride on the exception
-                unserved = list(getattr(e, "_unserved", []))
-                unserved += [r for w in waves[i + 1:] for r in w.requests]
-                self._fail(e, unserved)
+            work.extend(make_waves(fl, self.policy.ladder))
+        self._run_waves(work)
 
-    def _advance(self, wave: Wave) -> None:
+    def _run_waves(self, work: deque[Wave]) -> None:
+        """Drive the wave deque to empty. Per-wave device failures are
+        recovered *inside* `_advance` (retry/bisect/FAILED — they never
+        surface here); an exception escaping it means the recovery
+        machinery itself broke, so request accounting can no longer be
+        trusted: the engine enters its terminal failed state (admissions
+        start raising EngineClosed), unserved requests are requeued for
+        inspection, and the error propagates with partial_results."""
+        while work:
+            wave = work.popleft()
+            try:
+                self._advance(wave, work)
+            except Exception as e:
+                self.state = ENGINE_FAILED
+                unserved = list(wave.requests)
+                unserved += [r for w in work for r in w.requests]
+                if self._inflight is not None:
+                    unserved = list(self._inflight.requests) + unserved
+                    self._inflight = None
+                self.sched.requeue(unserved)
+                partial = dict(getattr(e, "partial_results", {}))
+                partial.update(self._results)
+                e.partial_results = partial
+                self._results = {}
+                raise
+
+    def _inject(self, site: str) -> None:
+        if self.fault_injector is not None:
+            self.fault_injector.check(site)
+
+    def _advance(self, wave: Wave, work: deque[Wave]) -> None:
         """One pipeline step: dispatch A(N), collect B(N-1), dispatch
         B(N). The collect sits *between* the dispatches so wave N's base
         search is already enqueued while wave N-1's verify materializes.
+
+        Each of the three device interactions is its own fault boundary:
+        a stage A/B failure recovers *this* wave (the predecessor is
+        unaffected — on an A failure it simply stays in flight); a
+        collect failure recovers the *predecessor* and this wave's stage
+        B still dispatches. Recovery re-executes from stage A — dispatches
+        are pure compute, so re-running them is always safe.
         """
         prev, self._inflight = self._inflight, None
         try:
+            self._inject("search")
             self.pipeline.dispatch_search(wave)
-            if prev is not None:
+        except Exception as e:
+            self._inflight = prev          # predecessor is untouched
+            self._recover(wave, e, work)
+            return
+        if prev is not None:
+            try:
+                self._inject("collect")
                 self._collect(prev)
-                prev = None
+            except Exception as e:
+                self._recover(prev, e, work)
+        try:
+            self._inject("verify")
             self.pipeline.dispatch_finish(wave)
         except Exception as e:
-            pending = list(prev.requests) if prev is not None else []
-            e._unserved = pending + list(wave.requests)
-            raise
+            self._recover(wave, e, work)
+            return
         self._inflight = wave
 
-    def _finish_inflight(self) -> None:
-        wave, self._inflight = self._inflight, None
-        if wave is None:
-            return
-        try:
-            self._collect(wave)
-        except Exception as e:
-            self._fail(e, list(wave.requests))
+    def _settle(self) -> None:
+        """Collect the in-flight wave (and any recovery work its failure
+        spawns) until nothing is left in the pipeline."""
+        while self._inflight is not None:
+            wave, self._inflight = self._inflight, None
+            work: deque[Wave] = deque()
+            try:
+                self._inject("collect")
+                self._collect(wave)
+            except Exception as e:
+                self._recover(wave, e, work)
+            if work:
+                self._run_waves(work)
 
-    def _fail(self, e: Exception, unserved: list[EngineRequest]):
-        self.sched.requeue(unserved)
-        partial = dict(getattr(e, "partial_results", {}))
-        partial.update(self._results)
-        e.partial_results = partial
-        self._results = {}
-        raise e
+    def _recover(self, wave: Wave, exc: Exception, work: deque[Wave]):
+        """Bounded failure recovery for one wave (DESIGN.md §9).
+
+        Retry the wave whole up to max_retries times (front of the work
+        deque, optional exponential backoff). A wave that exhausts its
+        budget and holds >1 request is bisected — each half a fresh wave
+        with a fresh budget, so a poison request is isolated in O(log n)
+        splits while its healthy wave-mates still get served. A singleton
+        that exhausts its budget is terminally FAILED with the exception
+        message. Total device calls per n-request flush are bounded by
+        (max_retries+1)·(2n−1): no unbounded retries, ever.
+        """
+        st = self.stats
+        st["faults"] += 1
+        wave.cands = None    # drop device buffers; re-execute from stage A
+        wave.result = None
+        if wave.attempt < self.policy.max_retries:
+            wave.attempt += 1
+            st["retries"] += 1
+            for r in wave.requests:
+                r.retries += 1
+            self._backoff(wave.attempt)
+            work.appendleft(wave)
+            return
+        if wave.n_real > 1:
+            st["quarantine_splits"] += 1
+            mid = (wave.n_real + 1) // 2
+            subs: list[Wave] = []
+            for part in (wave.requests[:mid], wave.requests[mid:]):
+                fl = Flush(base=wave.base, k=wave.k, exact=wave.exact,
+                           requests=part, reason=wave.reason)
+                subs.extend(make_waves(fl, self.policy.ladder))
+            for w in reversed(subs):
+                work.appendleft(w)
+            return
+        r, = wave.requests   # quarantine isolated it down to one request
+        r.stage = STAGE_FAILED
+        r.error = f"{type(exc).__name__}: {exc}"
+        st["failed"] += 1
+        self._failures[r.request_id] = r.error
+
+    def _backoff(self, attempt: int) -> None:
+        ms = self.policy.retry_backoff_ms
+        if ms <= 0:
+            return
+        dt = ms * (2 ** (attempt - 1)) / 1e3
+        advance = getattr(self.clock, "advance", None)
+        if advance is not None:  # ManualClock: simulated time, no sleeping
+            advance(dt)
+        else:
+            time.sleep(dt)
 
     # -- collection + stats --------------------------------------------------
 

@@ -1,0 +1,81 @@
+"""Deterministic fault injection for the serving engine (DESIGN.md §9).
+
+Production accelerator calls fail: transient XLA/driver errors, preempted
+devices, collective timeouts. The engine's recovery machinery (bounded
+retry, bisection quarantine, terminal FAILED marking) has to be exercised
+against *reproducible* failure schedules, so the injector is a seeded PRNG
+drawn once per guarded site — the same seed and the same wave schedule
+produce the same faults, which is what lets the chaos CI lane assert exact
+terminal states across runs.
+
+The engine consults the injector only at its device-call boundary
+(`ServingEngine._advance`), guarded by a single `is not None` check —
+with no injector configured the happy path carries zero overhead (the
+acceptance criterion: fault tolerance compiled out when disabled).
+
+Sites (the engine's three device interactions):
+
+    "search"  — before stage A dispatch (base-graph candidate generation)
+    "verify"  — before stage B dispatch (general-p verification)
+    "collect" — before host materialization of a wave's results
+
+`InjectedTimeout` models a stuck device call (distinct type so tests can
+assert the retry path is exception-type agnostic); both derive from
+`InjectedFault`, and the engine treats *any* exception from a device call
+identically — real faults get the same bounded recovery as injected ones.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SITES = ("search", "verify", "collect")
+
+
+class InjectedFault(RuntimeError):
+    """A simulated transient device-call failure."""
+
+
+class InjectedTimeout(InjectedFault):
+    """A simulated stuck/timed-out device call."""
+
+
+class FaultInjector:
+    """Seeded Bernoulli fault source, one draw per guarded call site.
+
+    rate: probability a guarded call raises InjectedFault.
+    timeout_rate: additional probability it raises InjectedTimeout.
+    sites: restrict injection to a subset of SITES (None = all).
+    """
+
+    def __init__(self, rate: float = 0.1, timeout_rate: float = 0.0,
+                 seed: int = 0, sites: tuple[str, ...] | None = None):
+        assert 0.0 <= rate + timeout_rate <= 1.0, (rate, timeout_rate)
+        if sites is not None:
+            unknown = set(sites) - set(SITES)
+            assert not unknown, f"unknown fault sites {sorted(unknown)}"
+        self.rate = float(rate)
+        self.timeout_rate = float(timeout_rate)
+        self.seed = int(seed)
+        self.sites = tuple(sites) if sites is not None else None
+        self.injected = 0
+        self._rng = np.random.default_rng(self.seed)
+
+    def reset(self) -> None:
+        """Rewind to the seed state (fresh deterministic schedule)."""
+        self._rng = np.random.default_rng(self.seed)
+        self.injected = 0
+
+    def check(self, site: str) -> None:
+        """Raise iff this draw lands inside the configured fault mass."""
+        if self.sites is not None and site not in self.sites:
+            return
+        u = self._rng.random()
+        if u < self.rate:
+            self.injected += 1
+            raise InjectedFault(
+                f"injected transient fault at {site} (#{self.injected})")
+        if u < self.rate + self.timeout_rate:
+            self.injected += 1
+            raise InjectedTimeout(
+                f"injected timeout at {site} (#{self.injected})")

@@ -55,6 +55,7 @@ class Wave:
     p_vec: np.ndarray | None         # (size,) f32 for the verify lane
     cands: object = None             # CandidateSet (device) after stage A
     result: tuple | None = None      # (ids, dists, stats) after stage B
+    attempt: int = 0                 # failed executions so far (retry budget)
 
     @property
     def n_real(self) -> int:

@@ -5,7 +5,9 @@ An `EngineRequest` wraps one ANNS-U-Lp query (`retrieval.service
 to track it through its life cycle (DESIGN.md §6):
 
     queued -> flushed -> searching -> verifying -> done
-                 \\-> shed   (admission control, overload policy "shed")
+                 \\-> shed    (admission control, overload policy "shed")
+                 \\-> failed  (retries exhausted after quarantine isolation;
+                               `error` carries the final exception message)
 
 Timestamps come from the engine's *injectable clock* (seconds, monotonic
 by contract) — `arrival_t` at admission, `flush_t` when the scheduler
@@ -34,6 +36,7 @@ SEARCHING = "searching"
 VERIFYING = "verifying"
 DONE = "done"
 SHED = "shed"
+FAILED = "failed"   # terminal: retry budget exhausted on an isolated wave
 
 
 @dataclass
@@ -58,6 +61,8 @@ class EngineRequest:
     flush_t: float = field(default=0.0)
     finish_t: float = field(default=0.0)
     degraded: bool = False
+    retries: int = 0            # device-call re-executions this request rode
+    error: str | None = None    # final exception message when stage == FAILED
 
     @property
     def queue_wait_s(self) -> float:

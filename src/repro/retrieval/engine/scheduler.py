@@ -146,6 +146,12 @@ class EnginePolicy:
     queue_capacity: int = 4096
     watermark: int | None = None   # queued-request depth that trips overload
     overload: str = SHED           # SHED (reject) | DEGRADE (exact-base lane)
+    # failure recovery (DESIGN.md §9): a wave that raises is retried up to
+    # max_retries times, then bisected (quarantine) with fresh budgets per
+    # half; a *singleton* wave that exhausts its budget marks its request
+    # FAILED — total device calls are bounded by (max_retries+1)*(2n-1).
+    max_retries: int = 2
+    retry_backoff_ms: float = 0.0  # exponential base; ManualClock advances
 
     def __post_init__(self):
         assert self.min_bucket >= 1 and self.max_batch >= self.min_bucket

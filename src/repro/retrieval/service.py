@@ -120,6 +120,12 @@ class UniversalVectorService:
     watermark: int | None = None
     overload: str = "shed"
     clock: object = None
+    # failure recovery (DESIGN.md §9): per-flush retry budget + backoff,
+    # and an optional seeded engine.FaultInjector for chaos rehearsal
+    # (None = fault injection compiled out of the happy path)
+    max_retries: int = 2
+    retry_backoff_ms: float = 0.0
+    fault_injector: object = None
     stats: dict = field(default_factory=_empty_stats)
 
     def __post_init__(self):
@@ -138,9 +144,12 @@ class UniversalVectorService:
                 max_wait_ms=self.max_wait_ms,
                 queue_capacity=self.queue_capacity,
                 watermark=self.watermark, overload=self.overload,
+                max_retries=self.max_retries,
+                retry_backoff_ms=self.retry_backoff_ms,
             )
             self._engine = ServingEngine(self.index, policy,
-                                         clock=self.clock, stats=self.stats)
+                                         clock=self.clock, stats=self.stats,
+                                         fault_injector=self.fault_injector)
         return self._engine
 
     # -- construction -------------------------------------------------------
@@ -386,8 +395,15 @@ class UniversalVectorService:
         capacity, so arbitrarily long lists never trip the bound. Returns
         request_id -> (ids (k,) int32, rooted dists (k,) f32); requests
         shed by admission control (watermark + overload="shed") have no
-        entry. If a wave fails (bad request, device error), responses
-        already computed ride on the exception as `partial_results`."""
+        entry, and neither do requests the engine's bounded failure
+        recovery marked terminally FAILED (retries exhausted after
+        quarantine isolation, DESIGN.md §9) — those carry their final
+        exception message in `engine.take_failures()` and count in
+        `stats["failed"]`. Transient device faults are invisible here:
+        the engine retries/bisects them and the retried results are
+        bitwise-identical. If the recovery machinery itself fails, the
+        engine enters its terminal failed state and the error propagates
+        with responses already computed as `partial_results`."""
         eng = self.engine
         out: dict[int, tuple] = {}
         i = 0
@@ -484,17 +500,23 @@ class UniversalVectorService:
         total-latency percentiles over non-cold requests only — so a
         7-second first-call compile can never masquerade as steady-state
         serving latency again."""
+        # fault-tolerance counters (DESIGN.md §9) ride on every summary so
+        # operational dashboards see retries/quarantines next to latency
+        faults = {key: int(self.stats.get(key, 0))
+                  for key in ("faults", "retries", "quarantine_splits",
+                              "failed")}
         lat = np.asarray(self.stats["latency_ms"], dtype=np.float64)
         if lat.size == 0:
             return {"count": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
                     "max": 0.0, "queue_ms": {}, "compute_ms": {},
-                    "cold_count": 0, "warm": {}}
+                    "cold_count": 0, "warm": {}, "faults": faults}
         out = {
             "count": int(lat.size),
             "mean": float(lat.mean()),
             "p50": float(np.percentile(lat, 50)),
             "p95": float(np.percentile(lat, 95)),
             "max": float(lat.max()),
+            "faults": faults,
         }
         recs = list(self.stats["latency_records"])
         if recs:

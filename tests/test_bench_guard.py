@@ -107,6 +107,51 @@ def test_expect_quick_flags_bad_baseline(tmp_path):
                                  expect_quick=True) == 1
 
 
+def test_malformed_baseline_is_actionable(tmp_path, capsys):
+    """A truncated/garbage baseline JSON (e.g. a kill mid-write before the
+    file was committed) must produce an actionable failure naming the file
+    and the regeneration command — never a JSONDecodeError traceback."""
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    (bdir / "BENCH_beam.json").write_text('{"bench": "beam", "rows": [')
+    (fdir / "BENCH_beam.json").write_text(json.dumps(_beam_payload()))
+    assert check_bench.run_check(bdir, fdir, ["beam"]) == 1
+    out = capsys.readouterr().out
+    assert "is malformed" in out
+    assert "benchmarks.run --quick --only beam" in out
+
+
+def test_malformed_fresh_is_actionable(tmp_path, capsys):
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    (bdir / "BENCH_beam.json").write_text(json.dumps(_beam_payload()))
+    (fdir / "BENCH_beam.json").write_text("[1, 2, 3]")  # not an object
+    assert check_bench.run_check(bdir, fdir, ["beam"]) == 1
+    out = capsys.readouterr().out
+    assert "is malformed" in out and "expected an object" in out
+    assert "interrupted or wrote garbage" in out
+
+
+def test_missing_fresh_names_the_regen_command(tmp_path, capsys):
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    (bdir / "BENCH_beam.json").write_text(json.dumps(_beam_payload()))
+    assert check_bench.run_check(bdir, fdir, ["beam"]) == 1
+    out = capsys.readouterr().out
+    assert "did the bench run?" in out
+    assert "benchmarks.run --quick --only beam" in out
+
+
+def test_missing_baseline_note_says_how_to_gate(tmp_path, capsys):
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    (fdir / "BENCH_beam.json").write_text(json.dumps(_beam_payload()))
+    assert check_bench.run_check(bdir, fdir, ["beam"]) == 0  # note, not fail
+    out = capsys.readouterr().out
+    assert "no committed baseline" in out
+    assert "benchmarks.run --quick --only beam" in out
+
+
 def test_errored_fresh_run_fails():
     fresh = {"bench": "beam", "status": "error", "quick": True,
              "error": "boom", "rows": []}

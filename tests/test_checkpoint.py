@@ -93,6 +93,50 @@ def test_async_error_surfaces(tmp_path):
         pass  # raised synchronously on some systems — equally fine
 
 
+def test_restore_falls_back_past_corrupt_newest(tmp_path):
+    """Crash-landed newest step (manifest truncated mid-write or missing):
+    step=None restore warns and falls back to the previous durable step
+    instead of trusting the newest directory name blindly."""
+    t = _tree()
+    save_checkpoint(tmp_path, 2, t)
+    save_checkpoint(tmp_path, 5, t)
+    (tmp_path / "step_00000005" / "manifest.json").write_text('{"step": 5,')
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.warns(UserWarning, match="skipping non-durable checkpoint"):
+        restored, step = restore_checkpoint(tmp_path, t, _shardings(mesh))
+    assert step == 2
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["b"]), np.asarray(t["params"]["b"]))
+
+    # a *missing* manifest (rename never observed) falls back the same way
+    save_checkpoint(tmp_path, 9, t)
+    (tmp_path / "step_00000009" / "manifest.json").unlink()
+    with pytest.warns(UserWarning, match="skipping non-durable checkpoint"):
+        _, step = restore_checkpoint(tmp_path, t, _shardings(mesh))
+    assert step == 2
+
+
+def test_restore_explicit_step_not_second_guessed(tmp_path):
+    """An explicitly requested corrupt step raises — no silent fallback."""
+    t = _tree()
+    save_checkpoint(tmp_path, 2, t)
+    save_checkpoint(tmp_path, 5, t)
+    (tmp_path / "step_00000005" / "manifest.json").write_text("garbage")
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(Exception):
+        restore_checkpoint(tmp_path, t, _shardings(mesh), step=5)
+
+
+def test_restore_no_durable_step_is_actionable(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    (tmp_path / "step_00000001" / "manifest.json").write_text("{}")
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.warns(UserWarning, match="skipping non-durable checkpoint"):
+        with pytest.raises(FileNotFoundError, match="no durable checkpoint"):
+            restore_checkpoint(tmp_path, t, _shardings(mesh))
+
+
 def test_bf16_bit_exact(tmp_path):
     # values that straddle bf16 rounding: must round-trip bit-exactly
     w = (jnp.arange(64, dtype=jnp.float32) * 0.1234567).astype(jnp.bfloat16)

@@ -1,0 +1,269 @@
+"""Chaos tests: fault-injected serving (DESIGN.md §9).
+
+The CI chaos lane runs this file once per REPRO_CHAOS_SEED matrix cell;
+the cell seed is folded into the local seed set, so three cells exercise
+nine distinct injected-failure schedules — every one deterministic and
+reproducible from the cell name alone.
+
+The contract under test: with a seeded FaultInjector at the engine's
+device-call boundary, every admitted request reaches a response or a
+deterministic terminal FAILED state (no hangs, no lost requests, no
+unbounded retries), and every response is bitwise-identical to a
+fault-free run of the same request set.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.uhnsw import UHNSW, UHNSWParams
+from repro.retrieval.engine import (
+    DRAINING,
+    ENGINE_FAILED,
+    EngineClosed,
+    FaultInjector,
+    ManualClock,
+)
+from repro.retrieval.service import QueryRequest, UniversalVectorService
+
+CHAOS = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+SEEDS = [CHAOS * 100 + i for i in range(3)]
+
+P_MIX = [0.5, 0.8, 1.0, 1.25, 2.0]
+
+
+def _requests(small_ds, n, seed=0, p=None):
+    rng = np.random.default_rng(seed)
+    return [
+        QueryRequest(
+            vector=small_ds.queries[int(rng.integers(len(small_ds.queries)))],
+            p=float(p if p is not None
+                    else P_MIX[int(rng.integers(len(P_MIX)))]),
+            k=10, request_id=i,
+        )
+        for i in range(n)
+    ]
+
+
+@pytest.fixture()
+def svc_factory(small_ds, graphs_bulk):
+    def make(**kw):
+        kw.setdefault("max_batch", 32)
+        kw.setdefault("min_bucket", 8)
+        return UniversalVectorService(
+            index=UHNSW(*graphs_bulk, UHNSWParams(t=80)), **kw)
+    return make
+
+
+def _assert_fault_accounting(svc, injector, out, failures, all_ids):
+    """The no-lost-requests invariant + counter consistency."""
+    assert set(out).isdisjoint(failures)
+    assert set(out) | set(failures) == all_ids
+    st = svc.stats
+    # every caught fault resolved into exactly one of retry/split/FAILED
+    assert st["faults"] == (st["retries"] + st["quarantine_splits"]
+                            + st["failed"])
+    assert st["faults"] == injector.injected   # no real faults in the mix
+    assert st["failed"] == len(failures)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_faulted_serving_matches_clean_bitwise(svc_factory, small_ds, seed):
+    """rate >= 10% transient faults: everything still served, responses
+    bitwise-equal to the fault-free run, counters consistent."""
+    reqs = _requests(small_ds, 40, seed=seed)
+    clean = svc_factory().serve(reqs)
+    assert len(clean) == 40
+
+    inj = FaultInjector(rate=0.25, seed=seed)
+    svc = svc_factory(fault_injector=inj)
+    out = svc.serve(reqs)
+    failures = svc.engine.take_failures()
+    _assert_fault_accounting(svc, inj, out, failures,
+                             {r.request_id for r in reqs})
+    assert svc.stats["faults"] > 0             # the schedule actually fired
+    for rid in out:
+        np.testing.assert_array_equal(out[rid][0], clean[rid][0])
+        np.testing.assert_array_equal(out[rid][1], clean[rid][1])
+    # at rate 0.25 with max_retries=2 the retry budget absorbs almost
+    # everything; whatever failed must carry the injector's message
+    for rid, err in failures.items():
+        assert "Injected" in err
+
+
+def test_timeout_faults_recovered_like_any_exception(svc_factory, small_ds):
+    """InjectedTimeout (distinct type) rides the same bounded recovery."""
+    reqs = _requests(small_ds, 24, seed=CHAOS)
+    clean = svc_factory().serve(reqs)
+    inj = FaultInjector(rate=0.1, timeout_rate=0.15, seed=CHAOS)
+    svc = svc_factory(fault_injector=inj)
+    out = svc.serve(reqs)
+    failures = svc.engine.take_failures()
+    _assert_fault_accounting(svc, inj, out, failures,
+                             {r.request_id for r in reqs})
+    for rid in out:
+        np.testing.assert_array_equal(out[rid][0], clean[rid][0])
+        np.testing.assert_array_equal(out[rid][1], clean[rid][1])
+
+
+def test_same_seed_same_failure_schedule(svc_factory, small_ds):
+    """Identical seed -> identical faults, outcomes, and counters."""
+    reqs = _requests(small_ds, 32, seed=CHAOS + 5)
+    runs = []
+    for _ in range(2):
+        inj = FaultInjector(rate=0.3, seed=CHAOS + 7)
+        svc = svc_factory(fault_injector=inj)
+        out = svc.serve(reqs)
+        runs.append((set(out), svc.engine.take_failures(),
+                     {k: svc.stats[k] for k in ("faults", "retries",
+                                                "quarantine_splits",
+                                                "failed")},
+                     inj.injected))
+    assert runs[0] == runs[1]
+
+
+def test_poison_request_quarantined_by_bisection(svc_factory, small_ds,
+                                                 monkeypatch):
+    """A request that deterministically kills its device call is isolated
+    by bisection and terminally FAILED; its healthy wave-mates are all
+    served, bitwise-equal to a run without the poison."""
+    d = small_ds.queries.shape[1]
+    poison_vec = np.full(d, 123.456, np.float32)
+    reqs = _requests(small_ds, 16, seed=1, p=0.8)   # one verify bucket
+    poison_id = 5
+    reqs[poison_id] = QueryRequest(vector=poison_vec, p=0.8, k=10,
+                                   request_id=poison_id)
+    healthy = [r for r in reqs if r.request_id != poison_id]
+    clean = svc_factory().serve(healthy)
+
+    svc = svc_factory()
+    real = svc.index.search_stage_candidates
+
+    def guarded(q, base):
+        rows = np.asarray(q)
+        if np.any(np.all(np.abs(rows - 123.456) < 1e-3, axis=1)):
+            raise RuntimeError("poison request aborted the device call")
+        return real(q, base)
+
+    monkeypatch.setattr(svc.index, "search_stage_candidates", guarded)
+    out = svc.serve(reqs)
+    failures = svc.engine.take_failures()
+    assert set(failures) == {poison_id}
+    assert "RuntimeError: poison request" in failures[poison_id]
+    assert set(out) == {r.request_id for r in healthy}
+    assert svc.stats["quarantine_splits"] >= 1   # bisection actually ran
+    assert svc.stats["failed"] == 1
+    assert svc.stats["retries"] >= 1             # whole-wave retries first
+    for rid in out:
+        np.testing.assert_array_equal(out[rid][0], clean[rid][0])
+        np.testing.assert_array_equal(out[rid][1], clean[rid][1])
+
+
+def test_rate_one_fails_everything_bounded(svc_factory, small_ds):
+    """Total device blackout: every request ends deterministically FAILED
+    (none served, none lost) and total device calls respect the
+    (max_retries+1)*(2n-1) bound — no unbounded retries, no hang."""
+    n = 8
+    inj = FaultInjector(rate=1.0, seed=CHAOS)
+    svc = svc_factory(fault_injector=inj)
+    reqs = _requests(small_ds, n, seed=2, p=0.8)    # one bucket of n
+    out = svc.serve(reqs)
+    failures = svc.engine.take_failures()
+    assert out == {}
+    assert set(failures) == {r.request_id for r in reqs}
+    assert svc.stats["failed"] == n
+    max_retries = svc.engine.policy.max_retries
+    assert inj.injected <= (max_retries + 1) * (2 * n - 1)
+    for err in failures.values():
+        assert "injected transient fault" in err
+
+
+def test_close_rejects_new_admissions(svc_factory, small_ds):
+    """close() drains, then the engine is terminally draining: submit,
+    make_request, and admit all raise EngineClosed instead of queueing
+    into an engine that will never serve."""
+    svc = svc_factory()
+    reqs = _requests(small_ds, 8, seed=3)
+    out = svc.serve(reqs)
+    assert len(out) == 8
+    eng = svc.engine
+    final = eng.close()
+    assert final == {}                      # nothing left in flight
+    assert eng.state == DRAINING
+    with pytest.raises(EngineClosed, match="draining"):
+        eng.make_request(reqs[0])
+    with pytest.raises(EngineClosed, match="draining"):
+        eng.submit(reqs[0])
+    with pytest.raises(EngineClosed, match="draining"):
+        eng.admit([])
+    with pytest.raises(EngineClosed):
+        svc.serve(reqs)                     # the service path is guarded too
+
+
+def test_broken_recovery_fails_engine_terminally(svc_factory, small_ds,
+                                                 monkeypatch):
+    """If the recovery machinery itself raises, request accounting can no
+    longer be trusted: the engine enters its terminal failed state, the
+    error propagates (with partial_results), and later admissions raise
+    EngineClosed."""
+    inj = FaultInjector(rate=1.0, seed=CHAOS)
+    svc = svc_factory(fault_injector=inj)
+    eng = svc.engine
+
+    def broken(wave, exc, work):
+        raise RuntimeError("recovery machinery broke")
+
+    monkeypatch.setattr(eng, "_recover", broken)
+    reqs = _requests(small_ds, 4, seed=4)
+    with pytest.raises(RuntimeError, match="recovery machinery broke") as ei:
+        svc.serve(reqs)
+    assert isinstance(ei.value.partial_results, dict)
+    assert eng.state == ENGINE_FAILED
+    with pytest.raises(EngineClosed, match="failed"):
+        eng.submit(reqs[0])
+
+
+def test_backoff_advances_injected_clock(svc_factory, small_ds, monkeypatch):
+    """retry_backoff_ms against a ManualClock: the retry advances
+    simulated time exponentially instead of sleeping."""
+    clk = ManualClock()
+    svc = svc_factory(clock=clk, retry_backoff_ms=5.0)
+    real = svc.index.search_stage_candidates
+    calls = {"n": 0}
+
+    def flaky(q, base):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return real(q, base)
+
+    monkeypatch.setattr(svc.index, "search_stage_candidates", flaky)
+    reqs = _requests(small_ds, 4, seed=5, p=0.8)
+    t0 = clk()
+    out = svc.serve(reqs)
+    assert set(out) == {r.request_id for r in reqs}
+    assert svc.stats["faults"] == 1 and svc.stats["retries"] == 1
+    assert clk() - t0 >= 0.005 - 1e-12      # 5ms * 2^(attempt-1), attempt=1
+
+
+def test_fault_counters_ride_latency_summary(svc_factory, small_ds):
+    inj = FaultInjector(rate=0.25, seed=SEEDS[0])
+    svc = svc_factory(fault_injector=inj)
+    svc.serve(_requests(small_ds, 24, seed=6))
+    summary = svc.latency_summary()["faults"]
+    for key in ("faults", "retries", "quarantine_splits", "failed"):
+        assert summary[key] == svc.stats[key]
+    assert summary["faults"] > 0
+
+
+def test_no_injector_means_no_fault_accounting(svc_factory, small_ds):
+    """fault_injector=None: the boundary is a single None-check and the
+    fault counters stay exactly zero (the zero-overhead criterion)."""
+    svc = svc_factory()
+    out = svc.serve(_requests(small_ds, 16, seed=7))
+    assert len(out) == 16
+    st = svc.stats
+    assert (st["faults"], st["retries"],
+            st["quarantine_splits"], st["failed"]) == (0, 0, 0, 0)
+    assert svc.engine.take_failures() == {}

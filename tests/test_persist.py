@@ -1,0 +1,342 @@
+"""Durable snapshots, WAL replay, and crash recovery (repro.index.persist).
+
+The contract under test (DESIGN.md §9): recover(dir) — newest durable
+snapshot + replay of the WAL's durable prefix — lands BIT-IDENTICALLY on
+the state of a never-crashed index (ids and distances, at every p,
+un-compacted delta inserts included), and any torn/corrupt file left by a
+crash is *detected* and stepped past, never loaded. The kill-in-the-middle
+sweep truncates the log at every record boundary and mid-record; the
+fallback tests corrupt the newest snapshot and the WAL history.
+"""
+
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.index.persist import (
+    DurableIndex,
+    RecoveryError,
+    SnapshotError,
+    latest_durable_snapshot,
+    list_snapshots,
+    load_snapshot,
+    read_manifest,
+    recover,
+    save_snapshot,
+)
+from repro.index.sharded import ShardedUHNSW
+from repro.index.wal import (
+    WalCorruption,
+    WriteAheadLog,
+    list_wals,
+    replay,
+    wal_path,
+)
+
+P_SWEEP = [0.5, 1.0, 1.25, 2.0]
+D = 16
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(11)
+    return (rng.standard_normal((120, D)).astype(np.float32),   # frozen
+            rng.standard_normal((30, D)).astype(np.float32),    # streamed
+            rng.standard_normal((5, D)).astype(np.float32))     # queries
+
+
+def _build(frozen):
+    return ShardedUHNSW.build(frozen, num_segments=2, m=12, seed=3,
+                              delta_capacity=12)
+
+
+def _search_all_p(idx, Q, k=10):
+    out = {}
+    for p in P_SWEEP:
+        ids, dists, _ = idx.search(Q, p, k)
+        out[p] = (np.asarray(ids), np.asarray(dists))
+    return out
+
+
+def _assert_identical(a, b):
+    for p in P_SWEEP:
+        np.testing.assert_array_equal(a[p][0], b[p][0], err_msg=f"ids p={p}")
+        np.testing.assert_array_equal(a[p][1], b[p][1],
+                                      err_msg=f"dists p={p}")
+
+
+# ---------------------------------------------------------------------------
+# WAL unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_wal_roundtrip_and_boundaries(tmp_path):
+    path = wal_path(tmp_path, 0)
+    rng = np.random.default_rng(0)
+    batches = [(np.arange(i * 3, i * 3 + 3),
+                rng.standard_normal((3, D)).astype(np.float32))
+               for i in range(4)]
+    bounds = []
+    with WriteAheadLog(path, sync=False) as wal:
+        for ids, vecs in batches:
+            bounds.append(wal.append(ids, vecs))
+    got, clean = replay(path)
+    assert clean and len(got) == 4
+    for (ids, vecs), (gids, gvecs) in zip(batches, got):
+        np.testing.assert_array_equal(gids, ids)
+        np.testing.assert_array_equal(gvecs, vecs)
+    # record boundaries are strictly increasing file offsets
+    assert bounds == sorted(set(bounds))
+
+    # torn tail: truncate at every boundary -> exactly that prefix replays
+    raw = path.read_bytes()
+    for n_rec, cut in enumerate(bounds):
+        path.write_bytes(raw[:cut])
+        got, clean = replay(path)
+        assert clean and len(got) == n_rec + 1
+        # ... and mid-record (a few bytes past the boundary) drops the
+        # torn record but keeps everything before it; the last boundary
+        # is EOF, so there is no next record to tear into
+        if cut + 7 <= len(raw):
+            path.write_bytes(raw[:cut + 7])
+            got, clean = replay(path)
+            assert not clean and len(got) == n_rec + 1
+
+
+def test_wal_detects_corruption_not_just_truncation(tmp_path):
+    path = wal_path(tmp_path, 0)
+    with WriteAheadLog(path, sync=False) as wal:
+        wal.append([0], np.ones((1, D), np.float32))
+        wal.append([1], np.ones((1, D), np.float32))
+    raw = bytearray(path.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF                   # flip a payload byte
+    path.write_bytes(bytes(raw))
+    got, clean = replay(path)
+    assert not clean and len(got) < 2            # CRC stops replay
+
+    # a non-WAL file is a caller bug, not a torn write
+    bogus = tmp_path / "wal_00000009.log"
+    bogus.write_bytes(b"definitely not a WAL, long enough to have a header")
+    with pytest.raises(WalCorruption):
+        replay(bogus)
+
+
+# ---------------------------------------------------------------------------
+# snapshot roundtrip + recovery identity
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_roundtrip_bitwise(tmp_path, corpus):
+    frozen, streamed, Q = corpus
+    idx = _build(frozen)
+    for v in streamed[:5]:                       # leave delta non-empty
+        idx.add(v)
+    path = save_snapshot(idx, tmp_path)
+    assert read_manifest(path)["seq"] == 0
+    back = load_snapshot(path)
+    assert back.n == idx.n
+    assert back._next_id == idx._next_id
+    assert len(back.delta) == len(idx.delta) == 5
+    np.testing.assert_array_equal(back._X_host, idx._X_host)
+    np.testing.assert_array_equal(back.delta.ids(), idx.delta.ids())
+    _assert_identical(_search_all_p(back, Q), _search_all_p(idx, Q))
+
+
+def test_recovery_identity_with_compactions_and_delta(tmp_path, corpus):
+    """The acceptance criterion: crash -> recover == never crashed, at
+    every p, across compaction boundaries AND with un-compacted delta
+    inserts pending."""
+    frozen, streamed, Q = corpus
+    idx = _build(frozen)
+    dur = DurableIndex.create(idx, tmp_path)
+    for v in streamed:                           # 30 adds, compacts at 12/24
+        dur.add(v)
+    assert idx.num_segments == 4                 # 2 built + 2 compacted
+    assert len(idx.delta) == 6                   # un-compacted tail
+    rec = recover(tmp_path)
+    assert rec.n == idx.n and len(rec.delta) == 6
+    assert rec._build_method == idx._build_method
+    _assert_identical(_search_all_p(rec, Q), _search_all_p(idx, Q))
+    dur.close()
+
+
+def test_kill_in_the_middle_sweep(tmp_path, corpus):
+    """Truncate the live WAL at every record boundary and mid-record:
+    recovery must land exactly on the corresponding prefix of adds —
+    structural state at every cut, full bitwise search identity at the
+    interesting cuts (empty, mid-delta, post-compaction, full).
+
+    The crash simulation is time-consistent: a crash while WAL s was the
+    live log means snapshots/WALs with seq > s did not exist yet, so each
+    cut re-materializes the state directory as it looked at that moment.
+    """
+    import shutil
+
+    frozen, streamed, Q = corpus
+    n0 = len(frozen)
+    state = tmp_path / "state"
+    dur = DurableIndex.create(_build(frozen), state)
+    # 14 adds: boundary 12 triggers a compaction + rotation mid-stream
+    n_adds = 14
+    for v in streamed[:n_adds]:
+        dur.add(v)
+    dur.close()
+    pristine = tmp_path / "pristine"
+    shutil.copytree(state, pristine)
+
+    # reference searches for the interesting prefixes, from a fresh
+    # never-persisted index replaying the same add stream
+    interesting = {0, 6, 12, n_adds}
+    ref_results, ref_segs = {}, {}
+    ref = _build(frozen)
+    for count in range(n_adds + 1):
+        if count:
+            ref.add(streamed[count - 1])
+        ref_segs[count] = ref.num_segments
+        if count in interesting:
+            ref_results[count] = _search_all_p(ref, Q)
+
+    # map every WAL record boundary to its durable add count: wal 0 holds
+    # adds 1..12 (the rotation point), wal 1 the tail
+    wals = {seq: p.read_bytes() for seq, p in list_wals(pristine)}
+    assert len(wals) == 2
+    rec_bytes = 12 + 8 + (8 + 4 * D)             # framing + payload, 1 vec
+    cuts = []                                    # (wal_seq, byte_len, count)
+    base_count = 0
+    for seq in sorted(wals):
+        batches, clean = replay(wal_path(pristine, seq))
+        assert clean
+        off = 8                                  # file header
+        cuts.append((seq, off, base_count))
+        for ids, _vecs in batches:
+            assert len(ids) == 1                 # one record per add()
+            off += rec_bytes
+            base_count += 1
+            cuts.append((seq, off, base_count))
+        assert off == len(wals[seq])
+    assert base_count == n_adds
+
+    for seq, cut, count in cuts:
+        for extra in (0, 7):                     # boundary and mid-record
+            # re-materialize the directory as of the crash instant
+            shutil.rmtree(state)
+            shutil.copytree(pristine, state)
+            for s_snap, p_snap in list_snapshots(state):
+                if s_snap > seq:
+                    shutil.rmtree(p_snap)
+            for s_wal, p_wal in list_wals(state):
+                if s_wal > seq:
+                    p_wal.unlink()
+                elif s_wal == seq:
+                    p_wal.write_bytes(wals[seq][:cut + extra])
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                rec = recover(state)
+            assert rec.n == n0 + count, (seq, cut, extra)
+            assert rec.num_segments == ref_segs[count], (seq, cut, extra)
+            if count in ref_results and extra == 0:
+                _assert_identical(_search_all_p(rec, Q),
+                                  ref_results[count])
+
+
+def test_torn_newest_snapshot_falls_back(tmp_path, corpus):
+    """Post-crash corruption of the newest snapshot: recovery must warn,
+    fall back to the previous durable snapshot, and rebuild the SAME
+    state from the retained WAL history."""
+    frozen, streamed, Q = corpus
+    idx = _build(frozen)
+    dur = DurableIndex.create(idx, tmp_path)
+    for v in streamed[:14]:                      # rotation at add 12
+        dur.add(v)
+    dur.close()
+    want = _search_all_p(idx, Q)
+    snaps = list_snapshots(tmp_path)
+    assert len(snaps) == 2
+    # tear the newest snapshot's array file (CRC must catch it)
+    newest = snaps[-1][1] / "arrays.npz"
+    newest.write_bytes(newest.read_bytes()[:100])
+    with pytest.raises(SnapshotError):
+        read_manifest(snaps[-1][1])
+    with pytest.warns(UserWarning, match="skipping non-durable snapshot"):
+        assert latest_durable_snapshot(tmp_path) == snaps[0][1]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        rec = recover(tmp_path)
+    assert rec.n == idx.n
+    _assert_identical(_search_all_p(rec, Q), want)
+
+
+def test_wal_gap_refuses_silent_recovery(tmp_path, corpus):
+    """A lost WAL segment (newest snapshot torn AND the old WAL's records
+    unreadable) must raise RecoveryError, not silently drop inserts."""
+    frozen, streamed, _ = corpus
+    dur = DurableIndex.create(_build(frozen), tmp_path)
+    for v in streamed[:14]:
+        dur.add(v)
+    dur.close()
+    for _, p in list_snapshots(tmp_path)[1:]:
+        (p / "arrays.npz").write_bytes(b"torn")
+    # wipe wal 0's records (keep the header): replay yields nothing there,
+    # so wal 1's first gid jumps past the fallback snapshot's n
+    w0 = wal_path(tmp_path, 0)
+    w0.write_bytes(w0.read_bytes()[:8])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(RecoveryError, match="id gap"):
+            recover(tmp_path)
+
+
+def test_recovered_durable_index_keeps_accepting_writes(tmp_path, corpus):
+    """DurableIndex.recover re-arms durability: post-recovery inserts are
+    themselves durable (a second recover sees them)."""
+    frozen, streamed, Q = corpus
+    dur = DurableIndex.create(_build(frozen), tmp_path)
+    for v in streamed[:5]:
+        dur.add(v)
+    dur.close()
+    dur2 = DurableIndex.recover(tmp_path)
+    for v in streamed[5:10]:
+        dur2.add(v)
+    want = _search_all_p(dur2.index, Q)
+    n_want = dur2.n
+    dur2.close()
+    rec = recover(tmp_path)
+    assert rec.n == n_want
+    _assert_identical(_search_all_p(rec, Q), want)
+
+
+def test_prune_keeps_fallback_window(tmp_path, corpus):
+    """Rotation prunes old snapshots but always keeps enough WAL history
+    that the *previous* snapshot alone can still rebuild the full state."""
+    frozen, streamed, _ = corpus
+    dur = DurableIndex.create(_build(frozen), tmp_path, keep_snapshots=2)
+    for v in streamed:                           # 30 adds -> 2 rotations
+        dur.add(v)
+    dur.close()
+    seqs = [s for s, _ in list_snapshots(tmp_path)]
+    assert len(seqs) == 2                        # pruned to the window
+    # every retained WAL seq >= oldest kept snapshot - 1
+    assert all(s >= seqs[0] - 1 for s, _ in list_wals(tmp_path))
+    # drop the newest snapshot entirely: the previous one + WALs suffice
+    snaps = list_snapshots(tmp_path)
+    import shutil
+    shutil.rmtree(snaps[-1][1])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        rec = recover(tmp_path)
+    assert rec.n == len(frozen) + len(streamed)
+
+
+def test_load_snapshot_rejects_garbage_dir(tmp_path):
+    bad = tmp_path / "snapshot_00000000"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{not json")
+    with pytest.raises(SnapshotError):
+        load_snapshot(bad)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert latest_durable_snapshot(tmp_path) is None
+        with pytest.raises(FileNotFoundError):
+            recover(tmp_path)

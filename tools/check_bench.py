@@ -97,9 +97,25 @@ SPECS = {
 
 
 def _load(path: Path) -> dict | None:
+    """Load one BENCH payload. None = file missing; a dict with the
+    "__malformed__" key = file exists but is not a usable payload (the
+    caller turns that into an actionable failure, never a traceback)."""
     if not path.exists():
         return None
-    return json.loads(path.read_text())
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+        return {"__malformed__": str(e)}
+    if not isinstance(payload, dict):
+        return {"__malformed__": f"top-level JSON is a "
+                                 f"{type(payload).__name__}, expected an "
+                                 f"object with status/quick/rows"}
+    return payload
+
+
+def _regen_hint(name: str) -> str:
+    return (f"regenerate it with `PYTHONPATH=src python -m benchmarks.run "
+            f"--quick --only {name}`")
 
 
 def _row_key(row: dict, keys: tuple[str, ...]) -> tuple:
@@ -179,12 +195,28 @@ def run_check(baseline_dir: Path, fresh_dir: Path, benches: list[str],
     for name in benches:
         base = _load(baseline_dir / f"BENCH_{name}.json")
         fresh = _load(fresh_dir / f"BENCH_{name}.json")
+        if base is not None and "__malformed__" in base:
+            problems.append(
+                f"{name}: committed baseline "
+                f"{baseline_dir / f'BENCH_{name}.json'} is malformed "
+                f"({base['__malformed__']}) — {_regen_hint(name)} and "
+                f"commit the result")
+            continue
+        if fresh is not None and "__malformed__" in fresh:
+            problems.append(
+                f"{name}: fresh {fresh_dir / f'BENCH_{name}.json'} is "
+                f"malformed ({fresh['__malformed__']}) — the bench run was "
+                f"interrupted or wrote garbage; {_regen_hint(name)}")
+            continue
         if base is None:
-            notes.append(f"{name}: no committed baseline, skipped")
+            notes.append(f"{name}: no committed baseline under "
+                         f"{baseline_dir}, skipped — to gate this bench, "
+                         f"{_regen_hint(name)} and commit it there")
             continue
         if fresh is None:
-            problems.append(f"{name}: fresh BENCH_{name}.json missing — "
-                            f"did the bench run?")
+            problems.append(f"{name}: fresh BENCH_{name}.json missing from "
+                            f"{fresh_dir} — did the bench run? "
+                            f"{_regen_hint(name)}")
             continue
         if expect_quick is not None:
             # under the CI invocation a skip is a hole in the gate, so BOTH
