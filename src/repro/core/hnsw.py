@@ -181,7 +181,7 @@ def _greedy_descend(q, X, adj_l, g2l, ep, ep_dist, nb, p, max_hops):
 
 
 def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops,
-                    width: int = 1):
+                    width: int = 1, thresh=None):
     """Level-0 ef-beam search for one query. Returns (ids, dists, nb, hops).
 
     `width` (W) is the multi-expansion factor (DESIGN.md §2 hot path): each
@@ -190,6 +190,15 @@ def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops,
     block, one merge sort. Trip count drops ~W×; each trip's tensor work is
     W× wider, which the hardware prefers to W serialized skinny hops. W=1
     reproduces the classic single-expansion search exactly.
+
+    `thresh` (traced scalar, or None for the unmodified program) is the
+    cross-segment pruning bound (DESIGN.md §3): a neighbor whose base-metric
+    distance exceeds it is counted in N_b (the evaluation happened) and
+    marked visited, but is *not admitted* to the beam — it can neither be
+    expanded nor returned. The loop therefore terminates once the
+    sub-threshold region reachable from the entry is exhausted, instead of
+    flooding the whole ef-neighborhood. The entry itself is always admitted
+    (it seeds navigation even when its own distance exceeds the bound).
     """
     n, m0 = X.shape[0], adj0.shape[1]
     words = (n + 31) // 32
@@ -247,6 +256,11 @@ def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops,
         dv = _base_dist(q, X[safe], p)
         dv = jnp.where(new, dv, jnp.inf)
         nb = nb + new.sum()
+        if thresh is not None:
+            # cross-segment early-cut: evaluated (counted above, visited
+            # stays set) but above the inherited global bound -> inf, which
+            # the merge below flags expanded and sorts past the beam
+            dv = jnp.where(dv <= thresh, dv, jnp.inf)
         # 5. merge beam + frontier with a single sort, keep top-ef
         all_ids = jnp.concatenate([ids, nbrs])
         all_dist = jnp.concatenate([dist, dv])
@@ -267,8 +281,45 @@ def _beam_search_l0(q, X, adj0, entry, entry_dist, nb0, p, ef, max_hops,
     return ids, dist, nb, hops
 
 
+def _greedy_descend_l0(q, X, adj0, ep, ep_dist, nb, p, max_hops,
+                       thresh=None):
+    """Greedy ef=1 descent on the *level-0* adjacency (ids are global, no
+    g2l remap). Used only on the thresholded cross-segment path: it walks
+    downhill before the admission-cut beam starts, so a far-off entry
+    whose whole neighborhood sits above the bound cannot strand the
+    search before it reaches the query's region. The walk stops as soon
+    as the entry drops below `thresh` — the beam takes over from there,
+    so descending further only duplicates evaluations the beam will
+    redo."""
+    n = X.shape[0]
+
+    def cond(s):
+        return s[0] & (s[4] < max_hops)
+
+    def body(s):
+        _, ep, ep_dist, nb, hops = s
+        nbrs = adj0[ep]  # (m0,) pad = n
+        valid = nbrs < n
+        dv = _base_dist(q, X[jnp.clip(nbrs, 0, n - 1)], p)
+        dv = jnp.where(valid, dv, jnp.inf)
+        j = jnp.argmin(dv)
+        better = dv[j] < ep_dist
+        ep2 = jnp.where(better, nbrs[j], ep)
+        d2 = jnp.minimum(dv[j], ep_dist)
+        go = better
+        if thresh is not None:
+            go = go & (d2 > thresh)
+        return (go, ep2, d2, nb + valid.sum(), hops + 1)
+
+    s = (jnp.asarray(True), ep, ep_dist, nb, jnp.int32(0))
+    if thresh is not None:
+        s = (ep_dist > thresh, ep, ep_dist, nb, jnp.int32(0))
+    s = jax.lax.while_loop(cond, body, s)
+    return s[1], s[2], s[3]
+
+
 def _search_one(q, X, arrays: GraphArrays, ef: int, max_hops: int,
-                expand_width: int = 1):
+                expand_width: int = 1, thresh=None):
     p = arrays.metric_p
     n = arrays.n
     ep = arrays.entry
@@ -279,8 +330,14 @@ def _search_one(q, X, arrays: GraphArrays, ef: int, max_hops: int,
         ep, ep_dist, nb = _greedy_descend(
             q, X, adj_l, g2l, ep, ep_dist, nb, p, max_hops
         )
+    if thresh is not None:
+        # finish navigation greedily at level 0 before the admission cut
+        # engages — see _greedy_descend_l0
+        ep, ep_dist, nb = _greedy_descend_l0(
+            q, X, arrays.adj0, ep, ep_dist, nb, p, max_hops, thresh=thresh
+        )
     return _beam_search_l0(q, X, arrays.adj0, ep, ep_dist, nb, p, ef,
-                           max_hops, width=expand_width)
+                           max_hops, width=expand_width, thresh=thresh)
 
 
 @functools.partial(jax.jit, static_argnames=("ef", "t", "max_hops", "expand_width"))
@@ -292,6 +349,7 @@ def knn_search(
     t: int,
     max_hops: int = 4096,
     expand_width: int = 1,
+    thresh: jax.Array | None = None,
 ):
     """Batched t-NN search under the graph's base metric.
 
@@ -303,6 +361,12 @@ def knn_search(
       t: number of candidates to return per query (paper's t).
       expand_width: W-way multi-expansion factor for the level-0 beam
         (W best unexpanded entries per hop; W=1 = classic HNSW).
+      thresh: optional (B,) per-query base-metric (root-free) pruning
+        bounds — the cross-segment inherited k-th-best (DESIGN.md §3).
+        Neighbors beyond a query's bound are evaluated (counted in n_b)
+        but never admitted to its beam; slots past the admitted set come
+        back as id n with dist inf. None (the default) compiles the
+        unmodified program — bit-identical to the pre-threshold search.
 
     Returns:
       ids   (B, t) int32 candidate ids sorted by base-metric distance;
@@ -316,9 +380,16 @@ def knn_search(
         f"expand_width must be in [1, ef]: got expand_width={expand_width}, "
         f"ef={ef} (top_k cannot select more entries than the beam holds)"
     )
-    ids, dists, nb, hops = jax.vmap(
-        lambda q: _search_one(q, X, arrays, ef, max_hops, expand_width)
-    )(Q)
+    if thresh is None:
+        ids, dists, nb, hops = jax.vmap(
+            lambda q: _search_one(q, X, arrays, ef, max_hops, expand_width)
+        )(Q)
+    else:
+        thresh = jnp.asarray(thresh, dtype=jnp.float32)
+        ids, dists, nb, hops = jax.vmap(
+            lambda q, th: _search_one(q, X, arrays, ef, max_hops,
+                                      expand_width, thresh=th)
+        )(Q, thresh)
     return ids[:, :t], dists[:, :t], nb, hops
 
 

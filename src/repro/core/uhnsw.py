@@ -100,6 +100,15 @@ class CandidateSet(NamedTuple):
     n_b: jax.Array         # (B,) base-metric evaluation counts (Eq. 1)
     hops: jax.Array        # (B,) level-0 while_loop trips
     base_p: float          # which base metric generated the candidates
+    # cross-segment phase split (ShardedUHNSW two_phase / round_robin,
+    # DESIGN.md §3): probe = threshold-free evaluations (phase A / the
+    # first cascade turn), spill = evaluations under an inherited pruning
+    # bound. n_b == n_b_probe + n_b_spill always; monolithic and
+    # independent-policy candidate generation is all probe.
+    n_b_probe: jax.Array | None = None   # (B,) defaults to n_b downstream
+    n_b_spill: jax.Array | float = 0.0   # (B,) or scalar zero
+    n_cand_spill: jax.Array | float = 0.0  # (B,) spill-phase survivors in
+                                           # the merged candidate list
 
 
 class SearchStats(NamedTuple):
@@ -117,6 +126,28 @@ class SearchStats(NamedTuple):
         # beaten by the running k-th best, so Eq. 1's effective T_p is
         # n_dim_frac * T_p. 1.0 on the full-dimension / base-metric-skip
         # paths. Counted over non-converged rows only, mirroring N_p.
+    # cross-segment phase split (DESIGN.md §3). Invariants:
+    # n_b == n_b_probe + n_b_spill; n_p_probe + n_p_spill == the graph-
+    # verify share of n_p (delta-tier exact scans are neither phase). The
+    # N_p split attributes verification work to each phase by its share of
+    # merged candidates — probe-phase work is what a monolithic index
+    # would also have paid; spill-phase work is the sharding overhead the
+    # inherited threshold is squeezing out. Monolithic searches leave the
+    # defaults (all probe, zero spill).
+    n_b_probe: jax.Array | float | None = None  # None -> equals n_b
+    n_b_spill: jax.Array | float = 0.0
+    n_p_probe: jax.Array | float | None = None  # None -> equals n_p
+    n_p_spill: jax.Array | float = 0.0
+
+    def phase_n_b(self):
+        """(probe, spill) N_b split with the None default resolved."""
+        probe = self.n_b if self.n_b_probe is None else self.n_b_probe
+        return probe, self.n_b_spill
+
+    def phase_n_p(self):
+        """(probe, spill) N_p split with the None default resolved."""
+        probe = self.n_p if self.n_p_probe is None else self.n_p_probe
+        return probe, self.n_p_spill
 
 
 def _verify_impl(
@@ -388,9 +419,12 @@ def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
 
     search_base_vec(Q_sub (B', d), p_sub (B',) f32, k, base_p) must run one
     homogeneous-base sub-batch and return (ids, dists, n_p, iters, n_b,
-    hops, n_dim_frac). Returns (ids (B, k), dists (B, k), SearchStats) with
-    per-row stats scattered back into request order; stats.base_p is the
-    (B,) host-side base-metric array (the partition itself is host logic).
+    hops, n_dim_frac) — optionally followed by the four per-phase counters
+    (n_b_probe, n_b_spill, n_p_probe, n_p_spill), which the sharded index
+    appends (DESIGN.md §3); absent, the whole sub-batch counts as probe.
+    Returns (ids (B, k), dists (B, k), SearchStats) with per-row stats
+    scattered back into request order; stats.base_p is the (B,) host-side
+    base-metric array (the partition itself is host logic).
 
     Sub-batch results stay *device-resident*: each output is restored to
     request order by one concatenate + one gather on device at the end —
@@ -416,25 +450,33 @@ def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
         sel = np.flatnonzero(base == base_p)
         if sel.size == 0:
             continue
-        s_ids, s_dists, s_np, s_it, s_nb, s_hops, s_frac = search_base_vec(
-            Q[sel], p_arr[sel], k, base_p
-        )
+        res = search_base_vec(Q[sel], p_arr[sel], k, base_p)
+        s_ids, s_dists, s_np, s_it, s_nb, s_hops, s_frac = res[:7]
+        if len(res) > 7:
+            nb_pr, nb_sp, np_pr, np_sp = res[7:]
+        else:  # phase-unaware index: everything is probe work
+            nb_pr, nb_sp = s_nb, jnp.zeros_like(s_nb)
+            np_pr, np_sp = s_np, jnp.zeros_like(s_np)
         sels.append(sel)
-        parts.append((s_ids, s_dists, s_np, s_nb, s_hops, s_frac))
+        parts.append((s_ids, s_dists, s_np, s_nb, s_hops, s_frac,
+                      nb_pr, nb_sp, np_pr, np_sp))
         iters = jnp.maximum(iters, jnp.asarray(s_it, jnp.int32))
     if len(parts) == 1:  # homogeneous batch: already in request order
-        ids, dists, n_p, n_b, hops, frac = parts[0]
+        (ids, dists, n_p, n_b, hops, frac,
+         nb_pr, nb_sp, np_pr, np_sp) = parts[0]
     else:
         order = np.concatenate(sels)
         inv = np.empty(b, np.int64)
         inv[order] = np.arange(b)
         inv = jnp.asarray(inv)
-        ids, dists, n_p, n_b, hops, frac = (
+        (ids, dists, n_p, n_b, hops, frac,
+         nb_pr, nb_sp, np_pr, np_sp) = (
             jnp.concatenate(xs, axis=0)[inv] for xs in zip(*parts)
         )
     stats = SearchStats(
         n_b=n_b, n_p=n_p, iterations=iters, base_p=base, hops=hops,
-        n_dim_frac=frac,
+        n_dim_frac=frac, n_b_probe=nb_pr, n_b_spill=nb_sp,
+        n_p_probe=np_pr, n_p_spill=np_sp,
     )
     return ids, dists, stats
 
@@ -581,7 +623,8 @@ class UHNSW:
             return self._search_scalar(Q, float(p), k)
         return self._search_mixed(Q, p, k)
 
-    def search_stage_candidates(self, Q, base_p: float) -> CandidateSet:
+    def search_stage_candidates(self, Q, base_p: float,
+                                k: int | None = None) -> CandidateSet:
         """Stage 1 of 2: base-metric candidate generation (Alg. 1 lines 1-6).
 
         Dispatches the batched beam search on the base graph named by
@@ -591,7 +634,12 @@ class UHNSW:
         verification. `search` composes exactly this stage with
         `search_stage_finish`, so staged execution is bitwise-identical
         to the fused call by construction.
+
+        `k` is accepted for signature parity with ShardedUHNSW (which
+        uses it to size the cross-segment pruning threshold); the
+        monolithic index has a single beam and ignores it.
         """
+        del k
         prm = self.params
         Q = jnp.asarray(Q, dtype=jnp.float32)
         arrays = self.arrays1 if base_p == 1.0 else self.arrays2

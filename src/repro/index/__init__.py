@@ -22,5 +22,5 @@ from repro.index.persist import (  # noqa: F401
     save_snapshot,
 )
 from repro.index.segment import SegmentedGraphs, build_segments, partition_dataset  # noqa: F401
-from repro.index.sharded import ShardedUHNSW  # noqa: F401
+from repro.index.sharded import ShardedParams, ShardedUHNSW  # noqa: F401
 from repro.index.wal import WalCorruption, WriteAheadLog, replay  # noqa: F401

@@ -2,14 +2,32 @@
 
 Query path (DESIGN.md §3):
 
-  1. Candidate generation — `jax.vmap` the batched beam search over the
-     stacked (S,) segment axis of the selected base graph (G1 for p <= 1.4,
-     G2 otherwise). One device program traverses all S segments; the segment
-     axis shards over the mesh's data axes (`shard_over`), so segments run
-     on different chips at scale.
-  2. Merge — the S per-segment top-t lists (already ascending) concatenate
-     to (B, S*t) and a single `lax.sort` keeps the global top-t under the
-     base metric. Segments hold disjoint ids, so no dedup is needed.
+  1. Candidate generation — policy-dependent (`ShardedParams.policy`):
+
+     * "independent" (default): every segment runs a fully independent
+       beam (the pre-threshold behavior; the exhaustive reference the
+       other policies are measured against).
+     * "two_phase": phase A probes a prior-ordered subset of
+       segments (largest/oldest first, `probe` of them) with the full
+       beam; its merged k-th-best base distance becomes the *inherited
+       pruning threshold* for phase B, which searches the remaining
+       segments with a shrunken beam whose admission is cut at the bound
+       (core/hnsw.knn_search `thresh`). Pruning is admissible for the
+       merged top-t whenever the threshold rank r satisfies
+       (S / probe) * r >= t — the bound then upper-bounds the global
+       t-th-best, so no pruned candidate could have entered the merged
+       list (`resolve_thresh_rank` picks r accordingly).
+     * "round_robin": single-phase cascade — every segment takes its turn
+       in prior order with the full beam, inheriting the running merged
+       k-th-best of all earlier turns as its threshold (first turn
+       unthresholded). Maximum pruning, S sequential device calls.
+
+     Per-segment searches `jax.vmap` over the stacked (S,) segment axis of
+     the selected base graph (G1 for p <= 1.4, G2 otherwise); the segment
+     axis shards over the mesh's data axes (`shard_over`).
+  2. Merge — per-segment top-t lists (already ascending) concatenate and a
+     single `lax.sort` keeps the global top-t under the base metric.
+     Segments hold disjoint ids, so no dedup is needed.
   3. Verification — ONE `verify_candidates` pass over the merged list.
      Running verification after the merge (not per segment) preserves the
      paper's early-termination N_p savings end-to-end: the convergence test
@@ -17,7 +35,8 @@ Query path (DESIGN.md §3):
      would produce.
   4. Delta merge — exact rooted-Lp distances for the mutable delta buffer
      (repro.index.delta) sort-merge into the verified top-k. Exactness means
-     no verification is owed for delta hits.
+     no verification is owed for delta hits; with abandonment on, the scan
+     inherits the verified k-th-best as its threshold (DESIGN.md §8).
 
 Streaming inserts: `add()` appends to the delta buffer; at capacity the
 buffer compacts into a new frozen segment — built with the index's build
@@ -29,6 +48,7 @@ Ids are assigned once and never change.
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +70,58 @@ from repro.index.delta import DeltaBuffer
 from repro.index.segment import SegmentedGraphs, build_segment_pair, build_segments
 
 
+@dataclass(frozen=True)
+class ShardedParams:
+    """Cross-segment search policy knobs (DESIGN.md §3).
+
+    policy: "independent" (the default — no cross-segment state; every
+      segment runs a fully independent beam, the exhaustive reference the
+      bench's ids-equal gate compares against), "two_phase" (probe +
+      threshold-pruned spill — the cheap cross-segment policy the bench
+      flags), or "round_robin" (single-phase cascade, every turn inherits
+      the running bound). The default stays exhaustive because threshold
+      pruning trades a bounded recall loss for N_b; deployments opt in
+      per index (benchmarks/sharded_index.py quantifies the trade).
+    probe: number of prior-ordered segments phase A searches with the full
+      beam (two_phase only). Clamped to [1, S-1]; with S == 1 or
+      probe >= S every policy degenerates to independent.
+    ef_shrink: phase-B beam-width multiplier, floored at the spill t
+      (two_phase only — round_robin keeps the full beam every turn and
+      relies on the threshold admission cut alone).
+    thresh_rank: rank r of the inherited running k-th-best used as the
+      pruning bound; None derives max(k, ceil(t * probe / S)) — the
+      smallest rank that keeps pruning admissible for the merged top-t
+      (see the module docstring) while never pruning inside the caller's
+      top-k. Clamped to [1, t].
+    """
+
+    policy: str = "independent"
+    probe: int = 1
+    ef_shrink: float = 0.5
+    thresh_rank: int | None = None
+
+    POLICIES = ("two_phase", "round_robin", "independent")
+
+    def __post_init__(self):
+        if self.policy not in self.POLICIES:
+            raise ValueError(
+                f"unknown policy {self.policy!r} (options: {self.POLICIES})")
+        if not self.probe >= 1:
+            raise ValueError(f"probe must be >= 1, got {self.probe}")
+        if not 0.0 < self.ef_shrink <= 1.0:
+            raise ValueError(
+                f"ef_shrink must be in (0, 1], got {self.ef_shrink}")
+
+    def resolve_thresh_rank(self, t: int, num_segments: int,
+                            k: int | None) -> int:
+        """The rank whose running best becomes the inherited bound."""
+        if self.thresh_rank is not None:
+            return max(1, min(self.thresh_rank, t))
+        probe = max(1, min(self.probe, num_segments))
+        admissible = -(-t * probe // num_segments)  # ceil(t*probe/S)
+        return max(1, min(max(k or 1, admissible), t))
+
+
 @functools.partial(
     jax.jit, static_argnames=("ef", "t", "max_hops", "expand_width")
 )
@@ -62,8 +134,16 @@ def segmented_knn_search(
     t: int,
     max_hops: int = 4096,
     expand_width: int = 1,
+    thresh: jax.Array | None = None,
 ):
     """Vmapped per-segment base-metric search + one-sort global merge.
+
+    `thresh` (optional (B,) root-free base-metric bounds, shared by every
+    segment in the stack) routes each per-segment beam through the
+    admission early-cut (core/hnsw.knn_search): evaluations past a query's
+    bound count toward n_b but are never admitted, so pruned segments
+    terminate as soon as their sub-threshold region is exhausted. None
+    compiles the unmodified exhaustive program.
 
     Returns (gids (B, t) int32 global ids (-1 past the end of real data),
     dists (B, t) base-metric root-free distances, n_b (B,), hops (B,)).
@@ -73,7 +153,7 @@ def segmented_knn_search(
     def per_segment(arr, x, ni):
         ids, dists, nb, hops = knn_search(
             arr, x, Q, ef=ef, t=t, max_hops=max_hops,
-            expand_width=expand_width,
+            expand_width=expand_width, thresh=thresh,
         )
         valid = ids < n_pad
         g = jnp.where(valid, ni[jnp.clip(ids, 0, n_pad - 1)], -1)
@@ -86,6 +166,34 @@ def segmented_knn_search(
     d = jnp.moveaxis(d, 0, 1).reshape(b, -1)
     sd, si = jax.lax.sort((d, g), num_keys=1)
     return si[:, :t], sd[:, :t], nb.sum(axis=0), hops.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("t",))
+def merge_phase_lists(g_a, d_a, g_b, d_b, t: int):
+    """Sort-merge probe (flag 0) and spill (flag 1) candidate lists.
+
+    g_a/d_a are phase-A (probe) global ids and base distances, g_b/d_b the
+    phase-B (spill) lists; widths may differ. Returns (gids (B, t), dists
+    (B, t), flags (B, t)) — flags mark each survivor's phase for the
+    per-phase N_p attribution.
+    """
+    g = jnp.concatenate([g_a, g_b], axis=1)
+    d = jnp.concatenate([d_a, d_b], axis=1)
+    flag = jnp.concatenate(
+        [jnp.zeros_like(g_a), jnp.ones_like(g_b)], axis=1)
+    sd, sg, sf = jax.lax.sort((d, g, flag), num_keys=1)
+    return sg[:, :t], sd[:, :t], sf[:, :t]
+
+
+@functools.partial(jax.jit, static_argnames=("t",))
+def merge_tagged_lists(g, d, f, g_new, d_new, t: int):
+    """One round_robin cascade step: merge a flag-carrying running list
+    with a new segment's (spill, flag 1) list, keeping the top-t."""
+    ga = jnp.concatenate([g, g_new], axis=1)
+    da = jnp.concatenate([d, d_new], axis=1)
+    fa = jnp.concatenate([f, jnp.ones_like(g_new)], axis=1)
+    sd, sg, sf = jax.lax.sort((da, ga, fa), num_keys=1)
+    return sg[:, :t], sd[:, :t], sf[:, :t]
 
 
 class ShardedUHNSW:
@@ -110,9 +218,15 @@ class ShardedUHNSW:
         data: np.ndarray,
         params: UHNSWParams | None = None,
         delta_capacity: int = 1024,
+        sharded_params: "ShardedParams | None" = None,
     ):
         self.segments = segments
         self.params = params or UHNSWParams()
+        self.sharded_params = sharded_params or ShardedParams()
+        # per-(base graph, probe count) device sub-stacks for the phase
+        # split; invalidated whenever the segment set restacks (compaction)
+        # or placement changes (shard_over)
+        self._phase_cache: dict = {}
         # _X_host holds only *frozen* rows (segment members); delta-resident
         # vectors live in the DeltaBuffer until compaction appends them here
         self._X_host = np.ascontiguousarray(data, dtype=np.float32)
@@ -140,6 +254,7 @@ class ShardedUHNSW:
         bulk: bool | None = None,
         delta_capacity: int = 1024,
         method: str | None = None,
+        sharded_params: "ShardedParams | None" = None,
     ) -> "ShardedUHNSW":
         """Partition + build. `method` selects the per-segment builder
         ("incremental" / "bulk" / "bulk_host", DESIGN.md §7; None = auto by
@@ -148,7 +263,8 @@ class ShardedUHNSW:
         segments = build_segments(data, num_segments=num_segments, m=m,
                                   seed=seed, bulk=bulk, method=method)
         idx = cls(segments, data, params=params,
-                  delta_capacity=delta_capacity)
+                  delta_capacity=delta_capacity,
+                  sharded_params=sharded_params)
         idx._build_method = method if method is not None else (
             None if bulk is None else ("bulk" if bulk else "incremental"))
         return idx
@@ -185,6 +301,7 @@ class ShardedUHNSW:
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         self._rt = rt
+        self._phase_cache.clear()  # sub-stacks must re-derive placement
         s = self.num_segments
         axis = next((a for a in rt.dp_axes
                      if s % int(rt.mesh.shape[a]) == 0), None)
@@ -224,25 +341,31 @@ class ShardedUHNSW:
         if metrics.is_static_p(p):
             p = float(p)
             _, base_p = self.base_arrays_for(p)
-            cands = self.search_stage_candidates(Q, base_p)
+            cands = self.search_stage_candidates(Q, base_p, k=k)
             return self.search_stage_finish(Q, cands, p, k)
         return self._search_mixed(Q, p, k)
 
-    def search_stage_candidates(self, Q, base_p: float) -> CandidateSet:
+    def search_stage_candidates(self, Q, base_p: float,
+                                k: int | None = None) -> CandidateSet:
         """Stage 1 of 2: segmented base-metric candidate generation.
 
         Same contract as `UHNSW.search_stage_candidates` (DESIGN.md §6):
-        dispatches the vmapped per-segment beam search + one-sort merge on
-        the base graph named by `base_p` and returns the device-resident
-        CandidateSet without a host sync, so the serving engine can overlap
-        wave N+1's search with wave N's verification.
+        dispatches the policy-selected cross-segment search (module
+        docstring) on the base graph named by `base_p` and returns the
+        device-resident CandidateSet without a host sync, so the serving
+        engine can overlap wave N+1's search with wave N's verification.
+        `k` (the caller's final top-k, when known) tightens the derived
+        threshold rank; None falls back to the admissible minimum.
         """
         Q = jnp.asarray(Q, dtype=jnp.float32)
         seg = self.segments
         arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
-        cand_ids, cand_dists, n_b, hops = self._segment_candidates(arrays, Q)
+        (cand_ids, cand_dists, n_b, hops,
+         n_b_probe, n_b_spill, n_cand_spill) = self._segment_candidates(
+            arrays, Q, k=k)
         return CandidateSet(ids=cand_ids, base_dists=cand_dists, n_b=n_b,
-                            hops=hops, base_p=base_p)
+                            hops=hops, base_p=base_p, n_b_probe=n_b_probe,
+                            n_b_spill=n_b_spill, n_cand_spill=n_cand_spill)
 
     def search_stage_finish(self, Q, cands: CandidateSet, p, k: int):
         """Stage 2 of 2: verification (or base-metric skip) + delta merge.
@@ -275,8 +398,9 @@ class ShardedUHNSW:
                     base_p=base_p, abandon=prm.abandon,
                     block_d=prm.abandon_block_d,
                 )
+            phases = self._phase_split(cands, n_p)
             return self._merge_delta(Q, p, k, ids, dists, n_p, iters, n_b,
-                                     hops, base_p, frac)
+                                     hops, base_p, frac, phases)
         # vector p over one homogeneous base: the traced-p program + the
         # per-row base-metric skip mask, exactly as _search_mixed runs it
         ids, dists, n_p, iters, frac = verify_candidates(
@@ -287,31 +411,162 @@ class ShardedUHNSW:
         ids, dists, n_p, frac = mask_base_rows(
             cand_ids, cand_dists, ids, dists, n_p, p, base_p, k,
             n_dim_frac=frac)
+        phases = self._phase_split(cands, n_p)
         p_arr = np.broadcast_to(np.asarray(p, np.float32).reshape(-1),
                                 (int(Q.shape[0]),))
         return self._merge_delta(Q, p_arr, k, ids, dists, n_p, iters, n_b,
-                                 hops, base_p, frac)
+                                 hops, base_p, frac, phases)
 
-    def _segment_candidates(self, arrays, Q):
-        """Vmapped per-segment beam search + one-sort merge (DESIGN.md §3)."""
+    def _phase_split(self, cands: CandidateSet, n_p):
+        """Per-phase (probe, spill) N_b/N_p attribution (DESIGN.md §3).
+
+        N_b splits exactly (counted per phase in the beams). N_p is one
+        merged verification pass, so it splits by each phase's share of
+        the merged candidate list — the verify work a phase's survivors
+        brought in. The delta tier's exact scans (added later in
+        `_merge_delta`) belong to neither phase.
+        """
+        n_b_probe = cands.n_b if cands.n_b_probe is None else cands.n_b_probe
+        n_b_spill = cands.n_b_spill
+        n_valid = (cands.ids >= 0).sum(axis=1)
+        spill_frac = (jnp.asarray(cands.n_cand_spill, jnp.float32)
+                      / jnp.maximum(n_valid, 1).astype(jnp.float32))
+        n_p_spill = n_p.astype(jnp.float32) * spill_frac
+        n_p_probe = n_p.astype(jnp.float32) - n_p_spill
+        return n_b_probe, n_b_spill, n_p_probe, n_p_spill
+
+    def _probe_order(self) -> list[int]:
+        """Prior ordering for the probe phase: largest segments first
+        (they cover the most data, so their running k-th best is the
+        tightest available bound), oldest first among equals — freshly
+        compacted slivers probe last."""
+        sizes = [g.n for g in self.segments.graphs1]
+        return sorted(range(len(sizes)), key=lambda i: (-sizes[i], i))
+
+    def _phase_stacks(self, base_p: float, probe: int):
+        """Cached (probe, spill) device sub-stacks of the segment axis.
+
+        Slicing the stacked pytrees is a handful of gathers; caching them
+        per (base graph, probe count) keeps the steady-state query path
+        free of per-call restacking. The cache clears on compaction and
+        re-placement (`shard_over`).
+        """
+        key = ("split", base_p, probe)
+        hit = self._phase_cache.get(key)
+        if hit is not None:
+            return hit
+        seg = self.segments
+        arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
+        order = self._probe_order()
+        sel_a = np.asarray(order[:probe])
+        sel_b = np.asarray(order[probe:])
+
+        def take(sel):
+            return (jax.tree.map(lambda x: x[sel], arrays),
+                    seg.X[sel], seg.node_ids[sel])
+
+        val = (take(sel_a), take(sel_b))
+        self._phase_cache[key] = val
+        return val
+
+    def _segment_stack(self, base_p: float, i: int):
+        """Cached singleton sub-stack of segment `i` (round_robin turns)."""
+        key = ("one", base_p, i)
+        hit = self._phase_cache.get(key)
+        if hit is None:
+            seg = self.segments
+            arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
+            sel = np.asarray([i])
+            hit = (jax.tree.map(lambda x: x[sel], arrays),
+                   seg.X[sel], seg.node_ids[sel])
+            self._phase_cache[key] = hit
+        return hit
+
+    def _segment_candidates(self, arrays, Q, k: int | None = None):
+        """Policy-dispatched cross-segment candidate generation.
+
+        Returns (gids (B, t), dists (B, t), n_b, hops, n_b_probe,
+        n_b_spill, n_cand_spill) — the last three feed the per-phase
+        stats split (DESIGN.md §3). Threshold-free work is "probe",
+        work under an inherited bound is "spill".
+        """
         prm = self.params
+        sp = self.sharded_params
         n_frozen = sum(g.n for g in self.segments.graphs1)
         t = min(prm.t, n_frozen)
         ef = max(prm.ef or 2 * prm.t, t)
-        return segmented_knn_search(
-            arrays, self.segments.X, self.segments.node_ids, Q,
-            ef=ef, t=t, max_hops=prm.max_hops,
-            # degenerate tiny beams can't host the full W; clamp, don't fail
-            expand_width=min(prm.expand_width, ef),
-        )
+        # degenerate tiny beams can't host the full W; clamp, don't fail
+        width = min(prm.expand_width, ef)
+        s = self.num_segments
+        probe = max(1, min(sp.probe, s))
+        single = s == 1 or (sp.policy == "two_phase" and probe >= s)
+        if sp.policy == "independent" or single:
+            gids, dists, n_b, hops = segmented_knn_search(
+                arrays, self.segments.X, self.segments.node_ids, Q,
+                ef=ef, t=t, max_hops=prm.max_hops, expand_width=width,
+            )
+            zero = jnp.zeros_like(n_b)
+            return gids, dists, n_b, hops, n_b, zero, zero
+        rank = sp.resolve_thresh_rank(t, s, k)
+        base_p = arrays.metric_p
+        if sp.policy == "two_phase":
+            (arr_a, x_a, ni_a), (arr_b, x_b, ni_b) = self._phase_stacks(
+                base_p, probe)
+            g_a, d_a, nb_a, hops_a = segmented_knn_search(
+                arr_a, x_a, ni_a, Q, ef=ef, t=t, max_hops=prm.max_hops,
+                expand_width=width,
+            )
+            thresh = d_a[:, rank - 1]
+            # spill beams only contribute candidates below the bound, so
+            # their width floors at the caller's k (not the global t) —
+            # phase A already guarantees t merged candidates exist. The
+            # floor also includes `rank`: a rank-r bound can admit up to r
+            # merged-list entrants per segment, and a narrower beam would
+            # silently drop some — at thresh_rank=t this keeps the
+            # conservative variant's ids==independent contract honest even
+            # on ef=t builds (ef*ef_shrink < t there).
+            ef_b = max(k or 1, rank, int(round(ef * sp.ef_shrink)))
+            t_b = min(t, ef_b)
+            g_b, d_b, nb_b, hops_b = segmented_knn_search(
+                arr_b, x_b, ni_b, Q, ef=ef_b, t=t_b, max_hops=prm.max_hops,
+                expand_width=min(width, ef_b), thresh=thresh,
+            )
+            gids, dists, flags = merge_phase_lists(g_a, d_a, g_b, d_b, t)
+            n_cand_spill = ((flags == 1) & (gids >= 0)).sum(axis=1)
+            return (gids, dists, nb_a + nb_b, hops_a + hops_b,
+                    nb_a, nb_b, n_cand_spill.astype(jnp.int32))
+        # round_robin: single-phase cascade — every turn inherits the
+        # running merged rank-r best of all earlier turns as its bound
+        order = self._probe_order()
+        gids = dists = flags = None
+        nb_probe = nb_spill = hops = None
+        for turn, i in enumerate(order):
+            arr_i, x_i, ni_i = self._segment_stack(base_p, i)
+            thresh = dists[:, rank - 1] if turn else None
+            g_i, d_i, nb_i, hops_i = segmented_knn_search(
+                arr_i, x_i, ni_i, Q, ef=ef, t=t, max_hops=prm.max_hops,
+                expand_width=width, thresh=thresh,
+            )
+            if turn == 0:
+                gids, dists = g_i, d_i
+                flags = jnp.zeros_like(g_i)
+                nb_probe, nb_spill, hops = nb_i, jnp.zeros_like(nb_i), hops_i
+            else:
+                gids, dists, flags = merge_tagged_lists(
+                    gids, dists, flags, g_i, d_i, t)
+                nb_spill = nb_spill + nb_i
+                hops = hops + hops_i
+        n_cand_spill = ((flags == 1) & (gids >= 0)).sum(axis=1)
+        return (gids, dists, nb_probe + nb_spill, hops,
+                nb_probe, nb_spill, n_cand_spill.astype(jnp.int32))
 
     def _graph_search_base_vec(self, Q, p_vec, k: int, base_p: float):
         """One homogeneous-base sub-batch with per-row p (traced-p program),
         mirroring UHNSW._search_base_vec over the segmented candidates."""
         prm = self.params
-        seg = self.segments
-        arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
-        cand_ids, cand_dists, n_b, hops = self._segment_candidates(arrays, Q)
+        Q = jnp.asarray(Q, dtype=jnp.float32)
+        cands = self.search_stage_candidates(Q, base_p, k=k)
+        cand_ids, cand_dists = cands.ids, cands.base_dists
         kappa = prm.kappa or max(k // 2, 1)
         ids, dists, n_p, iters, frac = verify_candidates(
             Q, cand_ids, self.X, p_vec, k, kappa, prm.tau,
@@ -321,7 +576,9 @@ class ShardedUHNSW:
         ids, dists, n_p, frac = mask_base_rows(
             cand_ids, cand_dists, ids, dists, n_p, p_vec, base_p, k,
             n_dim_frac=frac)
-        return ids, dists, n_p, iters, n_b, hops, frac
+        nb_pr, nb_sp, np_pr, np_sp = self._phase_split(cands, n_p)
+        return (ids, dists, n_p, iters, cands.n_b, cands.hops, frac,
+                nb_pr, nb_sp, np_pr, np_sp)
 
     def _search_mixed(self, Q, p, k: int):
         """Mixed-p batch: two-way G1/G2 partition, then one delta merge."""
@@ -331,12 +588,14 @@ class ShardedUHNSW:
         p_arr = np.asarray(stats.base_p)  # aligned (B,) — reuse its shape
         p_arr = np.broadcast_to(np.asarray(p, np.float32).reshape(-1),
                                 p_arr.shape)
+        phases = (stats.n_b_probe, stats.n_b_spill,
+                  stats.n_p_probe, stats.n_p_spill)
         return self._merge_delta(Q, p_arr, k, ids, dists, stats.n_p,
                                  stats.iterations, stats.n_b, stats.hops,
-                                 stats.base_p, stats.n_dim_frac)
+                                 stats.base_p, stats.n_dim_frac, phases)
 
     def _merge_delta(self, Q, p, k, ids, dists, n_p, iters, n_b, hops,
-                     base_p, n_dim_frac):
+                     base_p, n_dim_frac, phases=None):
         """Sort-merge exact delta-tier hits into the verified top-k.
 
         With abandonment on, the delta scan inherits the verified top-k's
@@ -344,6 +603,9 @@ class ShardedUHNSW:
         vectors that provably cannot enter the top-k skip their remaining
         dimension blocks. `n_dim_frac` is then updated as the N_p-weighted
         mean of the graph-verify fraction and the delta scan's fraction.
+        `phases` is the (n_b_probe, n_b_spill, n_p_probe, n_p_spill)
+        split from `_phase_split`; delta scans join the N_p total but
+        neither phase (they are the mutable tier, not segment work).
         """
         if len(self.delta):
             n_delta = len(self.delta)
@@ -368,8 +630,12 @@ class ShardedUHNSW:
             n_dim_frac = (n_dim_frac * n_p + delta_frac * n_delta) / \
                 jnp.maximum(n_p + n_delta, 1)
             n_p = n_p + n_delta  # exact-Lp scans count toward N_p
+        nb_pr, nb_sp, np_pr, np_sp = phases if phases is not None else (
+            n_b, jnp.zeros_like(n_b), n_p, jnp.zeros_like(n_p))
         stats = SearchStats(n_b=n_b, n_p=n_p, iterations=iters, base_p=base_p,
-                            hops=hops, n_dim_frac=n_dim_frac)
+                            hops=hops, n_dim_frac=n_dim_frac,
+                            n_b_probe=nb_pr, n_b_spill=nb_sp,
+                            n_p_probe=np_pr, n_p_spill=np_sp)
         return ids, dists, stats
 
     def modeled_query_cost(self, stats: SearchStats, p, d: int) -> dict:
@@ -417,6 +683,7 @@ class ShardedUHNSW:
         g1, g2 = build_segment_pair(vecs, m=m, seed=int(ids[0]) + 1,
                                     method=self._build_method)
         self.segments.append(g1, g2, ids)
+        self._phase_cache.clear()  # restack invalidates cached sub-stacks
         self.X = jnp.asarray(self._X_host)
         if self._rt is not None:  # restacking dropped the device placement
             self.shard_over(self._rt)

@@ -98,6 +98,11 @@ def serve_retrieval(args) -> int:
           f"({len(out) / dt:.0f} qps, {st['batches']} ladder waves, "
           f"queue peak {st['queue_peak']}); "
           f"avg N_b={st['n_b'] / len(reqs):.0f} "
+          # probe = threshold-free work, spill = work under an inherited
+          # cross-segment bound (DESIGN.md §3); spill=0 off the
+          # two_phase/round_robin policies
+          f"(probe={st['n_b_probe'] / len(reqs):.0f} "
+          f"spill={st['n_b_spill'] / len(reqs):.0f}) "
           f"N_p={st['n_p'] / len(reqs):.0f} "
           # effective T_p under early-abandoning verification (DESIGN.md
           # §8); no verification at all (n_p == 0) means full-dim = 1.0

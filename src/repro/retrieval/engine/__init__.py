@@ -95,6 +95,12 @@ def default_stats() -> dict:
     return {
         "queries": 0, "batches": 0, "inserts": 0, "compactions": 0,
         "n_b": 0.0, "n_p": 0.0,      # aggregate Eq. 1 counters
+        # cross-segment phase attribution (DESIGN.md §3): probe = work
+        # done without an inherited bound, spill = work under one. For
+        # monolithic indexes / the independent policy, probe == total and
+        # spill == 0; delta-tier scans join n_p but neither phase.
+        "n_b_probe": 0.0, "n_b_spill": 0.0,
+        "n_p_probe": 0.0, "n_p_spill": 0.0,
         # N_p-weighted scanned-dimension work (DESIGN.md §8): the
         # early-abandoning verify buckets report effective T_p as
         # dim_frac_w / n_p (1.0 = full-dimension scans everywhere)
@@ -452,18 +458,23 @@ class ServingEngine:
     # -- collection + stats --------------------------------------------------
 
     def _collect(self, wave: Wave) -> None:
-        ids, dists, n_b, n_p, frac = self.pipeline.collect(wave)
+        ids, dists, n_b, n_p, frac, phases = self.pipeline.collect(wave)
         done = self.clock()
         shape_key = (wave.base, wave.k, wave.exact, wave.size)
         cold = shape_key not in self._seen_shapes
         self._seen_shapes.add(shape_key)
         frac_w = float((frac * n_p).sum())
+        nb_pr, nb_sp, np_pr, np_sp = phases
         st = self.stats
         st["queries"] += wave.n_real
         st["batches"] += 1
         st["padded_rows"] += wave.padded_rows
         st["n_b"] += float(n_b.sum())
         st["n_p"] += float(n_p.sum())
+        st["n_b_probe"] += float(nb_pr.sum())
+        st["n_b_spill"] += float(nb_sp.sum())
+        st["n_p_probe"] += float(np_pr.sum())
+        st["n_p_spill"] += float(np_sp.sum())
         st["dim_frac_w"] += frac_w
         pb = st["per_base"]["G1" if wave.base == 1.0 else "G2"]
         pb["queries"] += wave.n_real

@@ -110,7 +110,8 @@ class TwoStagePipeline:
 
     def dispatch_search(self, wave: Wave) -> None:
         """Stage A: async-dispatch base-graph candidate generation."""
-        wave.cands = self.index.search_stage_candidates(wave.q, wave.base)
+        wave.cands = self.index.search_stage_candidates(wave.q, wave.base,
+                                                        k=wave.k)
         for r in wave.requests:
             r.stage = SEARCHING
 
@@ -131,17 +132,28 @@ class TwoStagePipeline:
 
     def collect(self, wave: Wave):
         """Materialize one wave on host (the pipeline's only blocking
-        point). Returns (ids, dists, n_b, n_p, frac) sliced to real rows.
+        point). Returns (ids, dists, n_b, n_p, frac, phases) sliced to
+        real rows; phases is the per-phase (n_b_probe, n_b_spill,
+        n_p_probe, n_p_spill) attribution from the sharded two-phase
+        search (probe = everything, spill = 0 for monolithic indexes and
+        the independent policy).
         """
         ids, dists, st = wave.result
         n = wave.n_real
+
+        def rows(x):
+            x = np.asarray(x, dtype=np.float64)
+            return x[:n] if x.ndim else np.full(n, float(x))
+
         ids = np.asarray(ids)[:n]
         dists = np.asarray(dists)[:n]
-        n_b = np.asarray(st.n_b, dtype=np.float64)[:n]
-        n_p = np.asarray(st.n_p, dtype=np.float64)[:n]
-        frac = np.asarray(st.n_dim_frac, dtype=np.float64)
-        frac = frac[:n] if frac.ndim else np.full(n, float(frac))
+        n_b = rows(st.n_b)
+        n_p = rows(st.n_p)
+        frac = rows(st.n_dim_frac)
+        nb_pr, nb_sp = st.phase_n_b()
+        np_pr, np_sp = st.phase_n_p()
+        phases = (rows(nb_pr), rows(nb_sp), rows(np_pr), rows(np_sp))
         wave.result = None
         for r in wave.requests:
             r.stage = DONE
-        return ids, dists, n_b, n_p, frac
+        return ids, dists, n_b, n_p, frac, phases

@@ -159,7 +159,7 @@ class UniversalVectorService:
               m: int = 32, num_segments: int = 4, seed: int = 0,
               delta_capacity: int = 1024, rt=None,
               expand_width: int | None = None, method: str | None = None,
-              **kw):
+              sharded_params=None, **kw):
         """Build a segmented sharded index over `data` (n, d) f32.
 
         With rt (a repro.dist Runtime), the segment axis is placed over the
@@ -168,13 +168,18 @@ class UniversalVectorService:
         the per-segment graph builder ("incremental" / "bulk" /
         "bulk_host", DESIGN.md §7; None = auto by segment size — the
         batched bulk path above index.segment.BULK_THRESHOLD) and carries
-        over to delta compaction. Remaining kwargs configure the service
-        (max_batch, min_bucket, queue_capacity).
+        over to delta compaction. `sharded_params` (a
+        repro.index.sharded.ShardedParams) selects the cross-segment
+        search policy — e.g. two_phase threshold propagation; the phase
+        split lands in stats["n_b_probe"] / ["n_b_spill"]. Remaining
+        kwargs configure the service (max_batch, min_bucket,
+        queue_capacity).
         """
         index = ShardedUHNSW.build(
             data, num_segments=num_segments, m=m,
             params=_with_expand_width(params, expand_width), seed=seed,
             delta_capacity=delta_capacity, method=method,
+            sharded_params=sharded_params,
         )
         if rt is not None:
             index.shard_over(rt)
@@ -345,12 +350,19 @@ class UniversalVectorService:
             ids, dists, stats = self.index.search(q, p, k)
         ids = np.asarray(ids)[:n_real]
         dists = np.asarray(dists)[:n_real]
-        n_b = np.asarray(stats.n_b, dtype=np.float64)[:n_real]
-        n_p = np.asarray(stats.n_p, dtype=np.float64)[:n_real]
+        def rows(x):
+            x = np.asarray(x, dtype=np.float64)
+            return x[:n_real] if x.ndim else np.full(n_real, float(x))
+
+        n_b = rows(stats.n_b)
+        n_p = rows(stats.n_p)
         # N_p-weighted scanned-dim fraction (1.0 on full-dimension paths)
-        frac = np.asarray(stats.n_dim_frac, dtype=np.float64)
-        frac = frac[:n_real] if frac.ndim else np.full(n_real, float(frac))
+        frac = rows(stats.n_dim_frac)
         frac_w = float((frac * n_p).sum())
+        # per-phase attribution (probe == total for monolithic/independent)
+        nb_pr, nb_sp = stats.phase_n_b()
+        np_pr, np_sp = stats.phase_n_p()
+        nb_pr, nb_sp, np_pr, np_sp = map(rows, (nb_pr, nb_sp, np_pr, np_sp))
         done = time.perf_counter()
         shape_key = (base, k, exact, size)
         cold = shape_key not in self._seen_shapes
@@ -361,6 +373,10 @@ class UniversalVectorService:
         st["padded_rows"] += size - n_real
         st["n_b"] += float(n_b.sum())
         st["n_p"] += float(n_p.sum())
+        st["n_b_probe"] += float(nb_pr.sum())
+        st["n_b_spill"] += float(nb_sp.sum())
+        st["n_p_probe"] += float(np_pr.sum())
+        st["n_p_spill"] += float(np_sp.sum())
         st["dim_frac_w"] += frac_w
         pb = st["per_base"]["G1" if base == 1.0 else "G2"]
         pb["queries"] += n_real

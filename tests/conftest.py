@@ -10,6 +10,8 @@ import pytest
 
 from repro.core.build import build_hnsw, build_hnsw_bulk
 from repro.core.datasets import make_dataset
+from repro.core.uhnsw import UHNSW, UHNSWParams
+from repro.index import SegmentedGraphs, ShardedUHNSW, build_segments
 
 
 @pytest.fixture(scope="session")
@@ -30,6 +32,57 @@ def graph_incremental(small_ds):
     # smaller subset: the sequential builder is Python-bound
     data = small_ds.data[:600]
     return build_hnsw(data, 2.0, m=8, ef_construction=60, seed=0)
+
+
+@pytest.fixture(scope="session")
+def segments4(small_ds):
+    """Frozen 4-segment build of small_ds (both base graphs per segment).
+
+    The per-segment graph builds are the expensive part of every sharded
+    test; they happen once per session here. Tests never search this object
+    directly — they wrap it via `sharded_index` (read-only) or
+    `make_sharded` (fresh mutable wrapper per call)."""
+    return build_segments(small_ds.data, num_segments=4, m=12, seed=0)
+
+
+def _wrap_segments(segs4, data, **kwargs):
+    """Fresh ShardedUHNSW over the frozen per-segment graphs: the wrapper's
+    mutable state (segment lists, delta buffer, params, phase caches) is
+    new, while the graphs themselves are shared and never rebuilt
+    (compaction appends, it does not modify existing segments)."""
+    clone = SegmentedGraphs(
+        graphs1=list(segs4.graphs1),
+        graphs2=list(segs4.graphs2),
+        global_ids=[ids.copy() for ids in segs4.global_ids],
+    )
+    return ShardedUHNSW(clone, data, **kwargs)
+
+
+@pytest.fixture(scope="session")
+def sharded_index(small_ds, segments4):
+    """Session-shared 4-segment index (t=150). READ-ONLY: tests that add(),
+    compact(), or mutate params/sharded_params must use make_sharded."""
+    return _wrap_segments(segments4, small_ds.data,
+                          params=UHNSWParams(t=150), delta_capacity=16)
+
+
+@pytest.fixture
+def make_sharded(small_ds, segments4):
+    """Factory for throwaway ShardedUHNSW instances over the session's
+    frozen 4-segment build. kwargs forward to ShardedUHNSW.__init__
+    (params, delta_capacity, sharded_params)."""
+    def _make(**kwargs):
+        kwargs.setdefault("params", UHNSWParams(t=150))
+        return _wrap_segments(segments4, small_ds.data, **kwargs)
+
+    return _make
+
+
+@pytest.fixture(scope="session")
+def monolithic_index(small_ds, graphs_bulk):
+    """Session-shared monolithic UHNSW at the same t as sharded_index —
+    the recall-parity reference. READ-ONLY."""
+    return UHNSW(*graphs_bulk, UHNSWParams(t=150))
 
 
 @pytest.fixture(scope="session")

@@ -276,11 +276,11 @@ def test_engine_transient_failure_retried_transparently(svc, small_ds,
     real = svc.index.search_stage_candidates
     calls = {"n": 0}
 
-    def flaky(Q, base_p):
+    def flaky(Q, base_p, **kw):
         calls["n"] += 1
         if calls["n"] == 2:
             raise RuntimeError("boom")
-        return real(Q, base_p)
+        return real(Q, base_p, **kw)
 
     monkeypatch.setattr(svc.index, "search_stage_candidates", flaky)
     svc2 = UniversalVectorService(index=svc.index, max_batch=32,

@@ -140,11 +140,11 @@ def test_poison_request_quarantined_by_bisection(svc_factory, small_ds,
     svc = svc_factory()
     real = svc.index.search_stage_candidates
 
-    def guarded(q, base):
+    def guarded(q, base, **kw):
         rows = np.asarray(q)
         if np.any(np.all(np.abs(rows - 123.456) < 1e-3, axis=1)):
             raise RuntimeError("poison request aborted the device call")
-        return real(q, base)
+        return real(q, base, **kw)
 
     monkeypatch.setattr(svc.index, "search_stage_candidates", guarded)
     out = svc.serve(reqs)
@@ -232,11 +232,11 @@ def test_backoff_advances_injected_clock(svc_factory, small_ds, monkeypatch):
     real = svc.index.search_stage_candidates
     calls = {"n": 0}
 
-    def flaky(q, base):
+    def flaky(q, base, **kw):
         calls["n"] += 1
         if calls["n"] == 1:
             raise RuntimeError("transient")
-        return real(q, base)
+        return real(q, base, **kw)
 
     monkeypatch.setattr(svc.index, "search_stage_candidates", flaky)
     reqs = _requests(small_ds, 4, seed=5, p=0.8)

@@ -24,7 +24,6 @@ import jax.numpy as jnp
 
 from repro.core.metrics import base_metric_for, pairwise_lp, rowwise_lp
 from repro.core.uhnsw import UHNSW, UHNSWParams, verify_candidates
-from repro.index.sharded import ShardedUHNSW
 from repro.kernels.ops import lp_gather_distance, pallas_rowwise_lp
 from repro.retrieval.service import (
     QueryRequest,
@@ -269,10 +268,11 @@ def test_index_mixed_search_matches_grouped(small_ds, graphs_bulk):
                                    np.asarray(sdists), rtol=1e-6)
 
 
-def test_sharded_mixed_search_with_delta_matches_grouped(small_ds):
-    sh = ShardedUHNSW.build(small_ds.data, num_segments=3, m=12,
-                            params=UHNSWParams(t=80), seed=0,
-                            delta_capacity=64)
+def test_sharded_mixed_search_with_delta_matches_grouped(small_ds,
+                                                         make_sharded):
+    # fresh wrapper over the session's frozen 4-segment build: this test
+    # mutates the index (delta adds), so it cannot share sharded_index
+    sh = make_sharded(params=UHNSWParams(t=80), delta_capacity=64)
     for i in range(8):  # delta-resident rows must merge identically
         sh.add(small_ds.data[i] + 0.01)
     rng = np.random.default_rng(2)

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.hnsw import GraphArrays, exact_topk, knn_search
-from repro.core.uhnsw import UHNSW, UHNSWParams, recall
+from repro.core.uhnsw import UHNSWParams, recall
 from repro.index import ShardedUHNSW, build_segments
 from repro.index.sharded import segmented_knn_search
 
@@ -13,18 +13,9 @@ P_GRID = [0.5, 1.25, 2.0]
 K = 10
 
 
-@pytest.fixture(scope="module")
-def sharded(small_ds):
-    return ShardedUHNSW.build(
-        small_ds.data, num_segments=4, m=12, params=UHNSWParams(t=150),
-        seed=0, delta_capacity=16,
-    )
-
-
-@pytest.fixture(scope="module")
-def monolithic(small_ds, graphs_bulk):
-    return UHNSW(*graphs_bulk, UHNSWParams(t=150))
-
+# the 4-segment and monolithic indexes come from the session fixtures
+# sharded_index / monolithic_index (tests/conftest.py): one graph build
+# per session, shared read-only across test modules.
 
 # ---------------------------------------------------------------------------
 # pad_to / stack: padding must not change search results
@@ -102,11 +93,12 @@ def test_segment_merge_equals_exact_topk(small_ds):
 
 
 @pytest.mark.parametrize("p", P_GRID)
-def test_recall_parity_with_monolithic(p, sharded, monolithic, small_ds):
+def test_recall_parity_with_monolithic(p, sharded_index, monolithic_index,
+                                       small_ds):
     Q = jnp.asarray(small_ds.queries)
     true_ids, _ = exact_topk(jnp.asarray(small_ds.data), Q, p, K)
-    ids_s, dists_s, stats_s = sharded.search(Q, p, K)
-    ids_m, _, _ = monolithic.search(Q, p, K)
+    ids_s, dists_s, stats_s = sharded_index.search(Q, p, K)
+    ids_m, _, _ = monolithic_index.search(Q, p, K)
     r_s, r_m = recall(ids_s, true_ids), recall(ids_m, true_ids)
     assert r_s >= r_m - 0.02, f"p={p}: sharded {r_s:.3f} vs mono {r_m:.3f}"
     # distances come out sorted and rooted
@@ -117,10 +109,10 @@ def test_recall_parity_with_monolithic(p, sharded, monolithic, small_ds):
         assert float(jnp.mean(stats_s.n_p)) < 150
 
 
-def test_base_p_skips_verification(sharded, small_ds):
+def test_base_p_skips_verification(sharded_index, small_ds):
     Q = jnp.asarray(small_ds.queries[:8])
     for p in (1.0, 2.0):
-        _, _, stats = sharded.search(Q, p, K)
+        _, _, stats = sharded_index.search(Q, p, K)
         assert float(jnp.max(stats.n_p)) == 0.0
 
 

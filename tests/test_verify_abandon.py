@@ -33,7 +33,6 @@ import jax.numpy as jnp
 from repro.core.lp_ops import lp_entry_bound, lp_suffix_bound
 from repro.core.metrics import lp_distance
 from repro.core.uhnsw import UHNSW, UHNSWParams, verify_candidates
-from repro.index.sharded import ShardedUHNSW
 from repro.kernels.ops import (
     lp_gather_abandon,
     lp_gather_distance,
@@ -370,12 +369,13 @@ def test_index_search_abandon_identical_ids(abandon_index, small_ds, p):
     assert np.all(np.asarray(sf.n_dim_frac) == 1.0)
 
 
-def test_sharded_with_delta_abandon_identical(small_ds):
+def test_sharded_with_delta_abandon_identical(small_ds, make_sharded):
     from dataclasses import replace
 
-    params = UHNSWParams(t=120, abandon=True)
-    idx = ShardedUHNSW.build(small_ds.data, num_segments=2, m=12,
-                             params=params, delta_capacity=128)
+    # fresh wrapper over the session's frozen 4-segment build (this test
+    # mutates params and the delta tier, so no sharing with sharded_index)
+    idx = make_sharded(params=UHNSWParams(t=120, abandon=True),
+                       delta_capacity=128)
     rng = np.random.default_rng(2)
     for _ in range(30):
         idx.add(rng.normal(size=small_ds.data.shape[1]).astype(np.float32))

@@ -79,6 +79,31 @@ SPECS = {
             "p95_vs_v1": ("lower", _LAT95_BAND),
         },
     },
+    # cross-segment threshold propagation (DESIGN.md §3): N_b per policy is
+    # the tentpole metric, plus two *absolute* flagship acceptances — the
+    # 4-segment two_phase policy must stay within 2x the monolithic N_b at
+    # <= 0.5 pt recall cost, and the conservative two_phase_safe variant
+    # must return ids identical to the exhaustive independent policy.
+    # Absolute checks run on the fresh rows (not baseline-relative), so a
+    # regenerated baseline can never quietly loosen them.
+    "sharded": {
+        "keys": ("dataset", "index", "policy", "segments", "p"),
+        "metrics": {
+            "recall": ("higher", _RECALL_BAND),
+            "N_b": ("lower", _RATIO_BAND),
+            "nb_ratio_vs_mono": ("lower", _RATIO_BAND),
+            "ids_match_independent": ("bool-true", None),
+            "self_nn_ok": ("bool-true", None),
+        },
+        "absolute": [
+            {"match": {"policy": "two_phase", "p": 1.25},
+             "metric": "nb_ratio_vs_mono", "op": "max", "limit": 2.0},
+            {"match": {"policy": "two_phase", "p": 1.25},
+             "metric": "recall_delta_vs_mono", "op": "min", "limit": -0.005},
+            {"match": {"policy": "two_phase_safe", "p": 2.0},
+             "metric": "ids_match_independent", "op": "true"},
+        ],
+    },
     # early-abandoning verification (DESIGN.md §8): the scanned-dimension
     # fraction is the tentpole metric — lower is better, and a fresh run
     # scanning >20%+2pt more than the committed baseline means the
@@ -146,6 +171,43 @@ def _check_metric(name, direction, band, base, fresh) -> str | None:
     return None
 
 
+def _check_absolute(name: str, spec: dict, fresh_rows: list[dict]) -> list:
+    """Flagship acceptance gates: fixed limits on fresh rows, independent
+    of whatever the committed baseline says. A check whose match pattern
+    selects no fresh row is itself a failure — dropping the flagship row
+    must not silently disarm its gate."""
+    problems = []
+    for chk in spec.get("absolute", []):
+        matched = [r for r in fresh_rows
+                   if all(r.get(k) == v for k, v in chk["match"].items())]
+        if not matched:
+            problems.append(f"{name}: no fresh row matches absolute check "
+                            f"{chk['match']} (flagship coverage dropped)")
+            continue
+        for row in matched:
+            val = row.get(chk["metric"])
+            if chk["op"] == "true":
+                if not bool(val):
+                    problems.append(f"{name} {chk['match']}: "
+                                    f"{chk['metric']} is {val!r}, must be "
+                                    f"True (absolute)")
+                continue
+            try:
+                v = float(val)
+            except (TypeError, ValueError):
+                problems.append(f"{name} {chk['match']}: {chk['metric']} "
+                                f"non-numeric ({val!r})")
+                continue
+            lim = chk["limit"]
+            if chk["op"] == "max" and v > lim:
+                problems.append(f"{name} {chk['match']}: {chk['metric']} "
+                                f"{v:g} > absolute limit {lim:g}")
+            elif chk["op"] == "min" and v < lim:
+                problems.append(f"{name} {chk['match']}: {chk['metric']} "
+                                f"{v:g} < absolute limit {lim:g}")
+    return problems
+
+
 def compare_bench(name: str, baseline: dict, fresh: dict) -> tuple[list, list]:
     """Compare one bench's payloads. Returns (problems, notes)."""
     spec = SPECS[name]
@@ -181,6 +243,7 @@ def compare_bench(name: str, baseline: dict, fresh: dict) -> tuple[list, list]:
                 problems.append(f"{name} {key}: {bad}")
     for key in fresh_rows:
         notes.append(f"{name} {key}: new row (no baseline), skipped")
+    problems += _check_absolute(name, spec, fresh.get("rows", []))
     return problems, notes
 
 
@@ -319,8 +382,53 @@ def selftest(baseline_dir: Path, benches: list[str]) -> int:
                 print("selftest FAIL: a 1.5x p50 latency regression "
                       "slipped through the serving gate")
                 return 1
+        if "sharded" in found:
+            payload = _load(baseline_dir / "BENCH_sharded.json")
+            nbonly = json.loads(json.dumps(payload))
+            touched = 0
+            for row in nbonly.get("rows", []):
+                if "N_b" in row:
+                    row["N_b"] = round(float(row["N_b"]) * 1.5, 1)
+                    if "nb_ratio_vs_mono" in row:
+                        row["nb_ratio_vs_mono"] = round(
+                            float(row["nb_ratio_vs_mono"]) * 1.5, 4)
+                    touched += 1
+            if not touched:
+                print("selftest FAIL: sharded baseline has no N_b rows to "
+                      "regress — threshold-propagation gate untestable")
+                return 1
+            tmpnb = Path(td) / "nb"
+            tmpnb.mkdir()
+            (tmpnb / "BENCH_sharded.json").write_text(json.dumps(nbonly))
+            print("selftest phase 4: injected N_b-only sharded regression "
+                  "(must fail)")
+            if run_check(baseline_dir, tmpnb, ["sharded"]) == 0:
+                print("selftest FAIL: a 1.5x sharded N_b regression "
+                      "slipped through the gate")
+                return 1
+            idsflip = json.loads(json.dumps(payload))
+            touched = 0
+            for row in idsflip.get("rows", []):
+                if row.get("policy") == "two_phase_safe" and \
+                        row.get("p") == 2.0:
+                    row["ids_match_independent"] = False
+                    touched += 1
+            if not touched:
+                print("selftest FAIL: sharded baseline has no two_phase_safe"
+                      " p=2.0 row — ids-parity gate untestable")
+                return 1
+            tmpids = Path(td) / "ids"
+            tmpids.mkdir()
+            (tmpids / "BENCH_sharded.json").write_text(json.dumps(idsflip))
+            print("selftest phase 5: flipped two_phase_safe ids parity "
+                  "(must fail)")
+            if run_check(baseline_dir, tmpids, ["sharded"]) == 0:
+                print("selftest FAIL: an ids-parity flip slipped through "
+                      "the sharded gate")
+                return 1
     print("selftest PASS: gate is live (self-compare clean, 25% regression "
-          "caught, p50-only latency regression caught)")
+          "caught, p50-only latency regression caught, sharded N_b and "
+          "ids-parity regressions caught)")
     return 0
 
 
@@ -329,7 +437,8 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", type=Path,
                     default=ROOT / "results" / "baselines" / "quick")
     ap.add_argument("--fresh", type=Path, default=ROOT / "results")
-    ap.add_argument("--benches", type=str, default="build,beam,serving,verify")
+    ap.add_argument("--benches", type=str,
+                    default="build,beam,serving,verify,sharded")
     ap.add_argument("--selftest", action="store_true",
                     help="inject a 25% regression and assert the gate trips")
     ap.add_argument("--expect-quick", action="store_true",
