@@ -44,6 +44,7 @@ def main(argv=None) -> int:
     from benchmarks import (
         beam_width,
         build,
+        compressed,
         fig1_lp_distance_cost,
         fig2_recall_vs_p,
         fig3_param_tuning,
@@ -67,6 +68,7 @@ def main(argv=None) -> int:
         "roofline": roofline.run,
         "serving": serving.run,
         "verify": verify.run,
+        "compressed": compressed.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     unknown = only - set(benches)

@@ -86,8 +86,11 @@ def _timed_search(idx, Q, p, k):
 def run(quick: bool = False):
     n = 1500 if quick else 4000
     nq = 16 if quick else 32
-    # hardware-shaped verification: lane-width kappa (see module docstring)
-    params = UHNSWParams(t=300, kappa=128, tau=0.92, abandon=True)
+    # hardware-shaped verification: lane-width kappa (see module docstring);
+    # energy_perm scans coordinates in decreasing-variance order so the
+    # abandon bound tightens in fewer blocks (DESIGN.md §10)
+    params = UHNSWParams(t=300, kappa=128, tau=0.92, abandon=True,
+                         energy_perm=True)
 
     rows = []
     for d in D_GRID:

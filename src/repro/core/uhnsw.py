@@ -69,6 +69,27 @@ class UHNSWParams:
       abandon_block_d: dimension-block width for the abandoning scan;
         None = auto (`kernels.ops.pick_abandon_block_d`: 32 when it
         divides d, the TPU sublane-friendly default).
+      compressed_band: two-band verification over the int8 compressed
+        storage band (DESIGN.md §10, default off). Each kappa batch is
+        first screened against the running k-th best using certified
+        lower bounds from the quantized replica (index/compressed.py);
+        only survivors issue f32 row gathers for the exact rerank.
+        Returned ids *and* dists are bitwise-identical to the
+        uncompressed path (a screened candidate's true distance provably
+        exceeds the running k-th best, and survivors are rescored from
+        the same f32 rows); `False` restores the pre-band program
+        bit-for-bit. Requires abandon=True (the screen is the abandon
+        path's storage-side sibling); `SearchStats.n_f32_rows_frac` /
+        `n_band_frac` report the traffic split.
+      energy_perm: scan coordinates in energy order (decreasing
+        per-coordinate variance) inside the abandoning verification
+        (DESIGN.md §10). Lp is coordinate-separable, so a fixed
+        permutation leaves every distance mathematically unchanged;
+        front-loading the mass makes the §8 suffix bounds go dead after
+        fewer blocks at small p. Surviving candidates' sums reassociate
+        across the permuted dimension order, so dists may wobble by
+        float-accumulation ulps vs the unpermuted scan (ids ties
+        included); default off to preserve the bit-exact legacy program.
     """
 
     t: int = 300          # candidate set size
@@ -82,6 +103,8 @@ class UHNSWParams:
     interpret: bool | None = None  # exact-Lp kernel dispatch override
     abandon: bool = True  # early-abandoning verification (DESIGN.md §8)
     abandon_block_d: int | None = None  # dimension-block width; None = auto
+    compressed_band: bool = False  # int8 screen + f32 rerank (DESIGN.md §10)
+    energy_perm: bool = False  # energy-ordered abandon scan (DESIGN.md §10)
 
 
 class CandidateSet(NamedTuple):
@@ -138,6 +161,18 @@ class SearchStats(NamedTuple):
     n_b_spill: jax.Array | float = 0.0
     n_p_probe: jax.Array | float | None = None  # None -> equals n_p
     n_p_spill: jax.Array | float = 0.0
+    n_f32_rows_frac: jax.Array | float = 1.0  # (B,) fraction of verified
+        # candidates whose full f32 rows were actually gathered. The
+        # two-band scan (DESIGN.md §10) screens candidates against the
+        # compressed band first, so only (first-k + screen survivors)
+        # rows hit f32 HBM: gathered f32 bytes = n_f32_rows_frac * n_p *
+        # 4d. 1.0 everywhere else (every scored candidate cost a full-row
+        # gather, even if the §8 scan then abandoned dimensions).
+    n_band_frac: jax.Array | float = 0.0  # (B,) int8 band dimensions
+        # scanned by the compressed screen, over n_p * d — the band-side
+        # byte traffic (1 byte/dim vs 4 on the f32 side): bytes ratio
+        # vs the uncompressed path = n_f32_rows_frac + n_band_frac / 4.
+        # 0.0 when no compressed band is in play.
 
     def phase_n_b(self):
         """(probe, spill) N_b split with the None default resolved."""
@@ -231,6 +266,8 @@ def _verify_abandon_impl(
     base_p: float,
     interpret: bool | None,
     block_d: int | None,
+    x_scan: jax.Array | None = None,  # (n, d) energy-permuted corpus view
+    perm: jax.Array | None = None,    # (d,) the permutation (x_scan order)
 ):
     """Threshold-propagating early-abandoning verification (DESIGN.md §8).
 
@@ -241,6 +278,16 @@ def _verify_abandon_impl(
     masked `lax.top_k` merge — abandoned candidates are +inf, so top_k's
     lowest-index tie rule selects exactly what the stable sort did.
     Returns the extra `n_dim_frac` (B,) — scanned dimension-work fraction.
+
+    When (x_scan, perm) are given, the blocked scan runs over the
+    energy-ordered corpus view (UHNSWParams.energy_perm, DESIGN.md §10):
+    Lp is coordinate-separable, so permuting q and x identically leaves
+    every distance mathematically unchanged while the high-variance
+    coordinates land in the earliest blocks and trip the abandon
+    thresholds sooner. The first-k scoring stays on the original (Q, X)
+    so the starting R is bitwise-identical either way; surviving
+    candidates' sums reassociate across the permuted order (ulp wobble
+    covered by the kernel contract's float tolerance).
     """
     B, t = cand_ids.shape
     d = Q.shape[1]
@@ -248,6 +295,9 @@ def _verify_abandon_impl(
     p_col = p if metrics.is_static_p(p) else p[:, None]
 
     from repro.kernels.ops import lp_gather_abandon, lp_gather_distance
+
+    Qs = Q if perm is None else jnp.take(Q, perm, axis=1)
+    Xs = X if x_scan is None else x_scan
 
     # line 7: R <- first K points of C, scored full-dimension (no threshold
     # exists yet; these are also the rows the abandon path must match
@@ -277,7 +327,7 @@ def _verify_abandon_impl(
         # what can still enter R; frozen rows abandon everything at entry
         thresh = jnp.where(done, -jnp.inf, r_dist[:, k - 1])
         bd, nd = lp_gather_abandon(
-            Q, batch, X, thresh, bbase, p, base_p=base_p,
+            Qs, batch, Xs, thresh, bbase, p, base_p=base_p,
             interpret=interpret, block_d=block_d,
         )
         # masked top-k merge (abandoned candidates are +inf): lax.top_k
@@ -310,6 +360,122 @@ def _verify_abandon_impl(
             dim_scan / (n_p.astype(jnp.float32) * d))
 
 
+def _verify_two_band_impl(
+    Q: jax.Array,          # (B, d) original coordinate order
+    Qp: jax.Array,         # (B, d) band (energy-permuted) coordinate order
+    cand_ids: jax.Array,   # (B, t) sorted ascending by base-metric distance
+    cand_base: jax.Array,  # (B, t) base-metric power sums (beam distances)
+    X: jax.Array,          # (n, d) f32 exact rows
+    codes: jax.Array,      # (n, d) int8 compressed band (band coord order)
+    scale: jax.Array,      # (d,) f32 dequant scales (band order)
+    radius: jax.Array,     # (d,) f32 max dequant error (band order)
+    p,                     # static float, or traced (B,) f32
+    k: int,
+    kappa: int,
+    tau: float,
+    base_p: float,
+    interpret: bool | None,
+    block_d: int | None,
+):
+    """Two-band verification: int8 screen, then exact f32 rerank of the
+    survivors (DESIGN.md §10).
+
+    Same convergence protocol as `_verify_abandon_impl`, but each kappa
+    batch first runs the compressed-band screen (`lp_gather_screen`):
+    candidates whose certified lower bound already exceeds the running
+    k-th best are dropped *before* any f32 row gather; only survivors hit
+    f32 HBM, via `lp_gather_distance` on the keep-masked id block.
+
+    Bitwise parity with the uncompressed paths, by construction: a
+    screened candidate's true power sum provably exceeds the running
+    k-th best (the bound is admissible and the kill strict), so it could
+    never enter R; survivors are rescored full-dimension from the same
+    f32 rows by the same elementwise-independent kernel, so ids AND
+    dists match `abandon=False` exactly (the same masked top_k merge as
+    the §8 path keeps selection identical to the stable sort).
+
+    Returns (ids, rooted dists, n_p, iters, n_dim_frac, n_f32_rows_frac,
+    n_band_frac) — the last two are the SearchStats traffic counters.
+    """
+    B, t = cand_ids.shape
+    d = Q.shape[1]
+    n_batches = max((t - k) // kappa, 0)
+    p_col = p if metrics.is_static_p(p) else p[:, None]
+
+    from repro.kernels.ops import lp_gather_distance, lp_gather_screen
+
+    # line 7: R <- first K points of C, scored full-dimension from f32
+    # rows (no threshold exists yet to screen against).
+    first = cand_ids[:, :k]
+    r_dist = lp_gather_distance(Q, first, X, p, root=False,
+                                interpret=interpret)
+    r_dist, r_ids = jax.lax.sort((r_dist, first), num_keys=1)
+    n_p0 = jnp.full((B,), k, dtype=jnp.int32)
+    ones = jnp.ones((B,), jnp.float32)
+    zeros = jnp.zeros((B,), jnp.float32)
+
+    if n_batches == 0:
+        return (r_ids, metrics._root(r_dist, p_col), n_p0, jnp.int32(0),
+                ones, ones, zeros)
+
+    dim0 = ones * (k * d)   # the first-k full-dimension rows
+    f32_0 = ones * k
+
+    def cond(s):
+        i, _, _, done, _, _, _, _ = s
+        return (i < n_batches) & ~jnp.all(done)
+
+    def body(s):
+        i, r_ids, r_dist, done, n_p, dim_scan, f32_rows, band_scan = s
+        start = k + i * kappa
+        batch = jax.lax.dynamic_slice(cand_ids, (0, start), (B, kappa))
+        bbase = jax.lax.dynamic_slice(cand_base, (0, start), (B, kappa))
+        thresh = jnp.where(done, -jnp.inf, r_dist[:, k - 1])
+        # band 1: int8 screen — certified-kill candidates that provably
+        # cannot beat the running k-th best (frozen rows kill everything
+        # at entry, so neither band touches their memory)
+        keep, nd8 = lp_gather_screen(
+            Qp, batch, codes, scale, radius, thresh, bbase, p,
+            base_p=base_p, interpret=interpret, block_d=block_d,
+        )
+        # band 2: f32 rows for the survivors only; screened-out slots
+        # become padding (-1) and score +inf without a gather
+        rb = jnp.where(keep, batch, -1)
+        bd = lp_gather_distance(Q, rb, X, p, root=False,
+                                interpret=interpret)
+        # identical masked top-k merge as the §8 abandon path (screened
+        # candidates are +inf, lowest-index tie rule == stable sort)
+        all_d = jnp.concatenate([r_dist, bd], axis=1)
+        all_i = jnp.concatenate([r_ids, batch], axis=1)
+        neg, sel = jax.lax.top_k(-all_d, k)
+        new_dist = -neg
+        new_ids = jnp.take_along_axis(all_i, sel, axis=1)
+        inter = (new_ids[:, :, None] == r_ids[:, None, :]).any(-1).sum(-1)
+        ratio = inter.astype(jnp.float32) / k
+        newly_done = ratio >= tau
+        keep_row = done[:, None]
+        r_ids = jnp.where(keep_row, r_ids, new_ids)
+        r_dist = jnp.where(keep_row, r_dist, new_dist)
+        n_p = n_p + jnp.where(done, 0, kappa)
+        n_kept = keep.sum(axis=1).astype(jnp.float32)
+        live = ~done
+        dim_scan = dim_scan + jnp.where(live, n_kept * d, 0.0)
+        f32_rows = f32_rows + jnp.where(live, n_kept, 0.0)
+        band_scan = band_scan + jnp.where(
+            live, nd8.sum(axis=1).astype(jnp.float32), 0.0)
+        return (i + 1, r_ids, r_dist, done | newly_done, n_p,
+                dim_scan, f32_rows, band_scan)
+
+    state = (jnp.int32(0), r_ids, r_dist, jnp.zeros((B,), bool), n_p0,
+             dim0, f32_0, zeros)
+    (iters, r_ids, r_dist, done, n_p,
+     dim_scan, f32_rows, band_scan) = jax.lax.while_loop(cond, body, state)
+    n_p_f = n_p.astype(jnp.float32)
+    return (r_ids, metrics._root(r_dist, p_col), n_p, iters,
+            dim_scan / (n_p_f * d), f32_rows / n_p_f,
+            band_scan / (n_p_f * d))
+
+
 _verify_jit_s = functools.partial(
     jax.jit, static_argnames=("p", "k", "kappa", "tau", "interpret")
 )(_verify_impl)
@@ -325,6 +491,15 @@ _verify_abandon_jit_v = functools.partial(
     jax.jit,
     static_argnames=("k", "kappa", "tau", "base_p", "interpret", "block_d"),
 )(_verify_abandon_impl)
+_verify_two_band_jit_s = functools.partial(
+    jax.jit,
+    static_argnames=("p", "k", "kappa", "tau", "base_p", "interpret",
+                     "block_d"),
+)(_verify_two_band_impl)
+_verify_two_band_jit_v = functools.partial(
+    jax.jit,
+    static_argnames=("k", "kappa", "tau", "base_p", "interpret", "block_d"),
+)(_verify_two_band_impl)
 
 
 def verify_candidates(
@@ -341,11 +516,17 @@ def verify_candidates(
     base_p: float = 1.0,
     abandon: bool = True,
     block_d: int | None = None,
+    band=None,
+    x_scan: jax.Array | None = None,
+    scan_perm: jax.Array | None = None,
 ):
     """Early-terminated exact-Lp re-ranking (Algorithm 1 lines 7-11).
 
     Returns (ids (B, k) int32, dists (B, k) f32 with root applied,
-    n_p (B,) int32, iters () int32, n_dim_frac (B,) f32).
+    n_p (B,) int32, iters () int32, n_dim_frac (B,) f32,
+    n_f32_rows_frac (B,) f32, n_band_frac (B,) f32) — the last two are
+    the SearchStats byte-traffic counters (1.0 / 0.0 off the two-band
+    path).
 
     p follows the scalar-vs-vector contract (DESIGN.md §6): a Python float
     re-ranks the whole batch under one metric (one compiled program per p);
@@ -366,21 +547,50 @@ def verify_candidates(
     static `base_p`) enables the zero-scan entry/suffix lower bounds;
     None disables them (threshold-only abandonment).
 
+    band (a CompressedBand, index/compressed.py) switches abandon=True to
+    the two-band scan (DESIGN.md §10): kappa batches are screened against
+    the running k-th best using certified int8 lower bounds and only
+    survivors gather f32 rows — ids and dists stay bitwise-identical to
+    band=None. (x_scan, scan_perm) instead keep the full-f32 abandon scan
+    but run it in energy coordinate order (UHNSWParams.energy_perm) —
+    x_scan is the pre-permuted corpus view, scan_perm its permutation;
+    mutually exclusive with `band` (the band is already energy-ordered).
+
     Candidate ids outside [0, n) are padding (sentinels from underfilled
     beams / merges) and are scored as inf so they can never enter R.
     `interpret` forwards to the kernel dispatch (None = backend-aware).
     """
+    B = Q.shape[0]
+    ones = jnp.ones((B,), jnp.float32)
+    zeros = jnp.zeros((B,), jnp.float32)
+    if abandon and band is not None:
+        if cand_base is None:
+            cand_base = jnp.zeros(cand_ids.shape, jnp.float32)
+        Qp = jnp.take(Q, band.perm, axis=1)
+        if metrics.is_static_p(p):
+            return _verify_two_band_jit_s(
+                Q, Qp, cand_ids, cand_base, X, band.codes, band.scale,
+                band.radius, float(p), k, kappa, tau, float(base_p),
+                interpret, block_d)
+        return _verify_two_band_jit_v(
+            Q, Qp, cand_ids, cand_base, X, band.codes, band.scale,
+            band.radius, jnp.atleast_1d(jnp.asarray(p, jnp.float32)),
+            k, kappa, tau, float(base_p), interpret, block_d)
     if abandon:
         if cand_base is None:
             cand_base = jnp.zeros(cand_ids.shape, jnp.float32)
         if metrics.is_static_p(p):
-            return _verify_abandon_jit_s(
+            out = _verify_abandon_jit_s(
                 Q, cand_ids, cand_base, X, float(p), k, kappa, tau,
-                float(base_p), interpret, block_d)
-        return _verify_abandon_jit_v(
-            Q, cand_ids, cand_base, X,
-            jnp.atleast_1d(jnp.asarray(p, jnp.float32)),
-            k, kappa, tau, float(base_p), interpret, block_d)
+                float(base_p), interpret, block_d, x_scan, scan_perm)
+        else:
+            out = _verify_abandon_jit_v(
+                Q, cand_ids, cand_base, X,
+                jnp.atleast_1d(jnp.asarray(p, jnp.float32)),
+                k, kappa, tau, float(base_p), interpret, block_d,
+                x_scan, scan_perm)
+        ids, dists, n_p, iters, frac = out
+        return ids, dists, n_p, iters, frac, ones, zeros
     if metrics.is_static_p(p):
         out = _verify_jit_s(Q, cand_ids, X, float(p), k, kappa, tau,
                             interpret)
@@ -389,17 +599,20 @@ def verify_candidates(
                             jnp.atleast_1d(jnp.asarray(p, jnp.float32)),
                             k, kappa, tau, interpret)
     ids, dists, n_p, iters = out
-    return ids, dists, n_p, iters, jnp.ones((Q.shape[0],), jnp.float32)
+    return ids, dists, n_p, iters, ones, ones, zeros
 
 
 def mask_base_rows(cand_ids, cand_dists, ids, dists, n_p, p_vec, base_p,
-                   k: int, n_dim_frac=None):
+                   k: int, n_dim_frac=None, n_f32_frac=None,
+                   n_band_frac=None):
     """Per-row base-metric skip (paper §3 preamble) inside a mixed batch.
 
     Rows whose p equals the base metric take the beam's own ordering —
     the exact values the scalar skip path produces — and report n_p = 0
-    (and, when given, a neutral n_dim_frac of 1.0, matching the scalar
-    skip path's stats).
+    (and, when given, the scalar skip path's neutral stats: n_dim_frac
+    and n_f32_frac 1.0, n_band_frac 0.0). Returns 3, 4, or 6 values
+    depending on which optional frac counters were supplied (the 6-form
+    requires all three).
     """
     pj = jnp.asarray(p_vec, dtype=jnp.float32)
     is_base = pj == base_p
@@ -410,7 +623,11 @@ def mask_base_rows(cand_ids, cand_dists, ids, dists, n_p, p_vec, base_p,
     n_p = jnp.where(is_base, 0, n_p)
     if n_dim_frac is None:
         return ids, dists, n_p
-    return ids, dists, n_p, jnp.where(is_base, 1.0, n_dim_frac)
+    frac = jnp.where(is_base, 1.0, n_dim_frac)
+    if n_f32_frac is None:
+        return ids, dists, n_p, frac
+    return (ids, dists, n_p, frac, jnp.where(is_base, 1.0, n_f32_frac),
+            jnp.where(is_base, 0.0, n_band_frac))
 
 
 def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
@@ -419,9 +636,10 @@ def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
 
     search_base_vec(Q_sub (B', d), p_sub (B',) f32, k, base_p) must run one
     homogeneous-base sub-batch and return (ids, dists, n_p, iters, n_b,
-    hops, n_dim_frac) — optionally followed by the four per-phase counters
-    (n_b_probe, n_b_spill, n_p_probe, n_p_spill), which the sharded index
-    appends (DESIGN.md §3); absent, the whole sub-batch counts as probe.
+    hops, n_dim_frac, n_f32_rows_frac, n_band_frac) — optionally followed
+    by the four per-phase counters (n_b_probe, n_b_spill, n_p_probe,
+    n_p_spill), which the sharded index appends (DESIGN.md §3); absent,
+    the whole sub-batch counts as probe.
     Returns (ids (B, k), dists (B, k), SearchStats) with per-row stats
     scattered back into request order; stats.base_p is the (B,) host-side
     base-metric array (the partition itself is host logic).
@@ -441,9 +659,10 @@ def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
     if b == 0:  # a drained bucket: well-formed empties, no device calls
         z = jnp.zeros((0, k))
         zi = jnp.zeros((0,), jnp.int32)
+        zf = jnp.zeros((0,), jnp.float32)
         return z.astype(jnp.int32), z, SearchStats(
             n_b=zi, n_p=zi, iterations=jnp.int32(0), base_p=base, hops=zi,
-            n_dim_frac=jnp.zeros((0,), jnp.float32))
+            n_dim_frac=zf, n_f32_rows_frac=zf, n_band_frac=zf)
     sels, parts = [], []
     iters = jnp.int32(0)
     for base_p in (1.0, 2.0):
@@ -451,32 +670,34 @@ def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
         if sel.size == 0:
             continue
         res = search_base_vec(Q[sel], p_arr[sel], k, base_p)
-        s_ids, s_dists, s_np, s_it, s_nb, s_hops, s_frac = res[:7]
-        if len(res) > 7:
-            nb_pr, nb_sp, np_pr, np_sp = res[7:]
+        (s_ids, s_dists, s_np, s_it, s_nb, s_hops, s_frac, s_f32,
+         s_band) = res[:9]
+        if len(res) > 9:
+            nb_pr, nb_sp, np_pr, np_sp = res[9:]
         else:  # phase-unaware index: everything is probe work
             nb_pr, nb_sp = s_nb, jnp.zeros_like(s_nb)
             np_pr, np_sp = s_np, jnp.zeros_like(s_np)
         sels.append(sel)
         parts.append((s_ids, s_dists, s_np, s_nb, s_hops, s_frac,
-                      nb_pr, nb_sp, np_pr, np_sp))
+                      s_f32, s_band, nb_pr, nb_sp, np_pr, np_sp))
         iters = jnp.maximum(iters, jnp.asarray(s_it, jnp.int32))
     if len(parts) == 1:  # homogeneous batch: already in request order
-        (ids, dists, n_p, n_b, hops, frac,
+        (ids, dists, n_p, n_b, hops, frac, f32f, bandf,
          nb_pr, nb_sp, np_pr, np_sp) = parts[0]
     else:
         order = np.concatenate(sels)
         inv = np.empty(b, np.int64)
         inv[order] = np.arange(b)
         inv = jnp.asarray(inv)
-        (ids, dists, n_p, n_b, hops, frac,
+        (ids, dists, n_p, n_b, hops, frac, f32f, bandf,
          nb_pr, nb_sp, np_pr, np_sp) = (
             jnp.concatenate(xs, axis=0)[inv] for xs in zip(*parts)
         )
     stats = SearchStats(
         n_b=n_b, n_p=n_p, iterations=iters, base_p=base, hops=hops,
         n_dim_frac=frac, n_b_probe=nb_pr, n_b_spill=nb_sp,
-        n_p_probe=np_pr, n_p_spill=np_sp,
+        n_p_probe=np_pr, n_p_spill=np_sp, n_f32_rows_frac=f32f,
+        n_band_frac=bandf,
     )
     return ids, dists, stats
 
@@ -532,11 +753,47 @@ class UHNSW:
         self.X = jnp.asarray(g1.data)
         self.arrays1 = GraphArrays.from_graph(g1)
         self.arrays2 = GraphArrays.from_graph(g2)
+        # lazy verification-scan caches (DESIGN.md §10): the int8 band
+        # for compressed_band, the energy-permuted corpus view for
+        # energy_perm. Built on first verified query, deterministic from
+        # X, so rebuilds (e.g. after snapshot recovery) are bit-stable.
+        self._band = None
+        self._scan_cache = None
 
     @property
     def dim(self) -> int:
         """Vector dimensionality served by this index."""
         return int(self.X.shape[1])
+
+    def compressed_band(self):
+        """The lazily-built int8 CompressedBand over self.X (§10)."""
+        if self._band is None:
+            from repro.index.compressed import build_band
+
+            self._band = build_band(self.X)
+        return self._band
+
+    def _scan_view(self):
+        """(x_scan, perm) energy-ordered corpus view for energy_perm."""
+        if self._scan_cache is None:
+            from repro.index.compressed import energy_order
+
+            perm = jnp.asarray(energy_order(self.X))
+            self._scan_cache = (jnp.take(self.X, perm, axis=1), perm)
+        return self._scan_cache
+
+    def _verify_extras(self) -> dict:
+        """The band / scan-view kwargs `verify_candidates` needs under
+        the current params (empty when both §10 features are off)."""
+        prm = self.params
+        if not prm.abandon:
+            return {}
+        if prm.compressed_band:
+            return {"band": self.compressed_band()}
+        if prm.energy_perm:
+            x_scan, perm = self._scan_view()
+            return {"x_scan": x_scan, "scan_perm": perm}
+        return {}
 
     # -- construction -------------------------------------------------------
 
@@ -676,23 +933,28 @@ class UHNSW:
             return ids, dists, SearchStats(
                 n_b=n_b, n_p=jnp.zeros_like(n_b), iterations=jnp.int32(0),
                 base_p=base_p, hops=hops,
-                n_dim_frac=jnp.ones(n_b.shape, jnp.float32))
+                n_dim_frac=jnp.ones(n_b.shape, jnp.float32),
+                n_f32_rows_frac=jnp.ones(n_b.shape, jnp.float32),
+                n_band_frac=jnp.zeros(n_b.shape, jnp.float32))
         kappa = prm.kappa or max(k // 2, 1)
         p_arg = float(p) if metrics.is_static_p(p) else p
-        ids, dists, n_p, iters, frac = verify_candidates(
+        ids, dists, n_p, iters, frac, f32f, bandf = verify_candidates(
             Q, cand_ids, self.X, p_arg, k, kappa, prm.tau,
             interpret=prm.interpret, cand_base=cand_dists, base_p=base_p,
             abandon=prm.abandon, block_d=prm.abandon_block_d,
+            **self._verify_extras(),
         )
         if not metrics.is_static_p(p):
             # per-row base-metric skip: base-p rows return the exact values
             # the scalar skip path produces
-            ids, dists, n_p, frac = mask_base_rows(
+            ids, dists, n_p, frac, f32f, bandf = mask_base_rows(
                 cand_ids, cand_dists, ids, dists, n_p, p, base_p, k,
-                n_dim_frac=frac)
+                n_dim_frac=frac, n_f32_frac=f32f, n_band_frac=bandf)
         return ids, dists, SearchStats(n_b=n_b, n_p=n_p, iterations=iters,
                                        base_p=base_p, hops=hops,
-                                       n_dim_frac=frac)
+                                       n_dim_frac=frac,
+                                       n_f32_rows_frac=f32f,
+                                       n_band_frac=bandf)
 
     def _search_scalar(self, Q, p: float, k: int):
         _, base_p = self.base_graph_for(p)
@@ -705,7 +967,7 @@ class UHNSW:
         cands = self.search_stage_candidates(Q, base_p)
         ids, dists, st = self.search_stage_finish(Q, cands, p_vec, k)
         return (ids, dists, st.n_p, st.iterations, st.n_b, st.hops,
-                st.n_dim_frac)
+                st.n_dim_frac, st.n_f32_rows_frac, st.n_band_frac)
 
     def _search_mixed(self, Q, p, k: int):
         """Mixed-p batch: two-way G1/G2 partition + per-row-p programs."""

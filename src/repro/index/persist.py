@@ -120,6 +120,18 @@ def save_snapshot(index: ShardedUHNSW, directory, seq: int | None = None,
     seq defaults to one past the newest committed snapshot. The manifest is
     written last (fsync'd), then the directory renames into place — the
     rename is the commit point, exactly as in checkpoint/store.py.
+
+    On-disk layout: `<dir>/snapshot_<seq:08d>/{manifest.json, arrays.npz}`.
+    The npz holds `X` ((n, d) f32 frozen rows), per-segment
+    `s<i:04d>.{ids,g1.*,g2.*}` graph arrays (int32/int64 exactly as the
+    `GraphArrays` leaves), `delta.{vecs,ids}` ((c, d) f32 / (c,) int64),
+    and — when a compressed band exists or `params.compressed_band` is
+    set — `band.{codes,scale,radius,perm}` ((n, d) int8, 3x (d,) f32/
+    int32; DESIGN.md §10). The manifest duplicates the band's energy
+    permutation (`band.perm`) so operators can inspect it without
+    unpacking arrays. Failure modes: a crash before the final rename
+    leaves only a `.tmp` directory loaders ignore; a crash after it
+    leaves a fully durable snapshot (rename is atomic on POSIX).
     """
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
@@ -149,6 +161,22 @@ def save_snapshot(index: ShardedUHNSW, directory, seq: int | None = None,
     payload["delta.vecs"] = delta_vecs
     payload["delta.ids"] = delta_ids.astype(np.int64)
 
+    # compressed storage band (DESIGN.md §10): persisted whenever the
+    # params ask for it (force-built here if no query has yet) or one was
+    # already built — recovery then skips the quantization pass and the
+    # energy permutation survives in the manifest alongside the arrays
+    band = index._band
+    if band is None and index.params.compressed_band:
+        band = index.compressed_band()
+    band_meta = None
+    if band is not None:
+        payload["band.codes"] = np.asarray(band.codes)
+        payload["band.scale"] = np.asarray(band.scale)
+        payload["band.radius"] = np.asarray(band.radius)
+        payload["band.perm"] = np.asarray(band.perm)
+        band_meta = {"n": band.n, "d": band.d,
+                     "perm": np.asarray(band.perm).tolist()}
+
     arrays_file = tmp / "arrays.npz"
     np.savez(arrays_file, **payload)
     with open(arrays_file, "rb") as f:
@@ -165,6 +193,7 @@ def save_snapshot(index: ShardedUHNSW, directory, seq: int | None = None,
         "params": asdict(index.params),
         "d": int(index.dim),
         "segments": seg_meta,
+        "band": band_meta,
         "arrays": {"file": "arrays.npz", "crc32": zlib.crc32(raw),
                    "size": len(raw)},
     }
@@ -252,8 +281,17 @@ def load_snapshot(path, params: UHNSWParams | None = None) -> ShardedUHNSW:
 
     The rebuilt index is bit-identical to the saved one: the per-segment
     `GraphArrays` round-trip exactly (the restack re-pads the same inputs
-    to the same envelope), the data matrix is byte-preserved, and the
-    delta contents saved with the snapshot are restored verbatim.
+    to the same envelope), the data matrix is byte-preserved, the
+    delta contents saved with the snapshot are restored verbatim, and a
+    persisted compressed band (DESIGN.md §10) is reattached byte-for-byte
+    — no re-quantization pass on the recovery path (an index saved
+    *without* a band lazily rebuilds one on first use; `build_band` is
+    deterministic, so either route lands on identical bytes).
+
+    `params` overrides the saved UHNSWParams (the manifest copy is
+    filtered against the current dataclass fields, so snapshots written
+    before a param existed load with its default). Raises SnapshotError
+    via `read_manifest` on a torn/invalid snapshot.
     """
     path = Path(path)
     manifest = read_manifest(path)
@@ -277,6 +315,20 @@ def load_snapshot(path, params: UHNSWParams | None = None) -> ShardedUHNSW:
     idx._next_id = int(manifest["next_id"])
     assert idx._next_id == len(X) + len(idx.delta), \
         (idx._next_id, len(X), len(idx.delta))
+    if "band.codes" in npz.files:
+        from repro.index.compressed import CompressedBand
+
+        perm = np.asarray(npz["band.perm"], dtype=np.int32)
+        band_meta = manifest.get("band") or {}
+        if "perm" in band_meta:  # the manifest copy is authoritative
+            mperm = np.asarray(band_meta["perm"], dtype=np.int32)
+            assert np.array_equal(mperm, perm), "band perm mismatch"
+        idx._band = CompressedBand(
+            codes=jnp.asarray(npz["band.codes"]),
+            scale=jnp.asarray(npz["band.scale"]),
+            radius=jnp.asarray(npz["band.radius"]),
+            perm=jnp.asarray(perm),
+        )
     return idx
 
 
@@ -321,6 +373,21 @@ class DurableIndex:
     search API delegate to the wrapped index, so a DurableIndex drops into
     `UniversalVectorService(index=...)` and `service.insert` rides the WAL
     automatically.
+
+    Args:
+      index: the live ShardedUHNSW to wrap (its `on_compact` hook is
+        claimed; `close()` releases it).
+      directory: snapshot + WAL root; created on first save.
+      sync: fsync every WAL append (True, the durable default) or leave
+        flushing to the OS (False — faster, loses the tail on power cut).
+      keep_snapshots: how many newest snapshots `prune()` retains
+        (floored at 1); WALs are kept from one sequence before the
+        oldest retained snapshot onward.
+
+    Failure modes: `add`/`add_batch` raise RuntimeError if no WAL is open
+    (constructed directly instead of via create/recover); recovery raises
+    FileNotFoundError with no durable snapshot and RecoveryError on a WAL
+    id gap (see module docstring).
     """
 
     def __init__(self, index: ShardedUHNSW, directory, sync: bool = True,

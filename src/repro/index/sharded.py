@@ -74,25 +74,35 @@ from repro.index.segment import SegmentedGraphs, build_segment_pair, build_segme
 class ShardedParams:
     """Cross-segment search policy knobs (DESIGN.md §3).
 
-    policy: "independent" (the default — no cross-segment state; every
-      segment runs a fully independent beam, the exhaustive reference the
-      bench's ids-equal gate compares against), "two_phase" (probe +
-      threshold-pruned spill — the cheap cross-segment policy the bench
-      flags), or "round_robin" (single-phase cascade, every turn inherits
-      the running bound). The default stays exhaustive because threshold
-      pruning trades a bounded recall loss for N_b; deployments opt in
-      per index (benchmarks/sharded_index.py quantifies the trade).
-    probe: number of prior-ordered segments phase A searches with the full
-      beam (two_phase only). Clamped to [1, S-1]; with S == 1 or
-      probe >= S every policy degenerates to independent.
-    ef_shrink: phase-B beam-width multiplier, floored at the spill t
-      (two_phase only — round_robin keeps the full beam every turn and
-      relies on the threshold admission cut alone).
-    thresh_rank: rank r of the inherited running k-th-best used as the
-      pruning bound; None derives max(k, ceil(t * probe / S)) — the
-      smallest rank that keeps pruning admissible for the merged top-t
-      (see the module docstring) while never pruning inside the caller's
-      top-k. Clamped to [1, t].
+    Frozen dataclass; invalid values raise ValueError at construction
+    (`__post_init__`), never at query time.
+
+    Attributes:
+      policy: str — one of POLICIES. "independent" (the default — no
+        cross-segment state; every segment runs a fully independent beam,
+        the exhaustive reference the bench's ids-equal gate compares
+        against), "two_phase" (probe + threshold-pruned spill — the
+        cheap cross-segment policy the bench flags), or "round_robin"
+        (single-phase cascade, every turn inherits the running bound).
+        The default stays exhaustive because threshold pruning trades a
+        bounded recall loss for N_b; deployments opt in per index
+        (benchmarks/sharded_index.py quantifies the trade). Any other
+        string raises ValueError.
+      probe: int >= 1 — number of prior-ordered segments phase A
+        searches with the full beam (two_phase only; the prior order is
+        `ShardedUHNSW._probe_order`, largest segments first). Clamped to
+        [1, S-1] at query time; with S == 1 or probe >= S every policy
+        degenerates to independent. probe < 1 raises ValueError.
+      ef_shrink: float in (0, 1] — phase-B beam-width multiplier,
+        floored at the spill t (two_phase only — round_robin keeps the
+        full beam every turn and relies on the threshold admission cut
+        alone). Out-of-range raises ValueError.
+      thresh_rank: int | None — rank r of the inherited running k-th
+        best used as the pruning bound; None derives
+        max(k, ceil(t * probe / S)) — the smallest rank that keeps
+        pruning admissible for the merged top-t (see the module
+        docstring) while never pruning inside the caller's top-k.
+        Clamped to [1, t] by `resolve_thresh_rank`.
     """
 
     policy: str = "independent"
@@ -236,6 +246,13 @@ class ShardedUHNSW:
         self._next_id = len(self._X_host)
         self._rt = None  # set by shard_over; re-applied after compaction
         self._build_method = None  # compaction builder; None = auto by size
+        # lazy verification-scan caches (DESIGN.md §10): the int8 band /
+        # energy-permuted view cover the *frozen* rows only (the delta
+        # tier stays f32 and is scanned exactly); compaction rebuilds
+        # both over the grown corpus (deterministic, so recovery lands on
+        # identical bytes)
+        self._band = None
+        self._scan_cache = None
         # durability hook (repro.index.persist.DurableIndex): called after a
         # compaction commits, when the delta is empty — the cheap moment to
         # rotate the snapshot + WAL pair. None = no durability layer.
@@ -331,6 +348,37 @@ class ShardedUHNSW:
         seg = self.segments
         return (seg.arrays1, 1.0) if base == 1.0 else (seg.arrays2, 2.0)
 
+    def compressed_band(self):
+        """The lazily-built int8 CompressedBand over the frozen rows
+        (DESIGN.md §10); rebuilt from scratch after each compaction."""
+        if self._band is None:
+            from repro.index.compressed import build_band
+
+            self._band = build_band(self.X)
+        return self._band
+
+    def _scan_view(self):
+        """(x_scan, perm) energy-ordered frozen-corpus view (energy_perm)."""
+        if self._scan_cache is None:
+            from repro.index.compressed import energy_order
+
+            perm = jnp.asarray(energy_order(self.X))
+            self._scan_cache = (jnp.take(self.X, perm, axis=1), perm)
+        return self._scan_cache
+
+    def _verify_extras(self) -> dict:
+        """Band / scan-view kwargs for `verify_candidates` under the
+        current params (empty when both §10 features are off)."""
+        prm = self.params
+        if not prm.abandon:
+            return {}
+        if prm.compressed_band:
+            return {"band": self.compressed_band()}
+        if prm.energy_perm:
+            x_scan, perm = self._scan_view()
+            return {"x_scan": x_scan, "scan_perm": perm}
+        return {}
+
     def search(self, Q, p, k: int):
         """Batched ANNS-U-Lp over all segments + delta.
 
@@ -390,32 +438,38 @@ class ShardedUHNSW:
                 n_p = jnp.zeros_like(n_b)
                 iters = jnp.int32(0)
                 frac = jnp.ones(n_b.shape, jnp.float32)
+                f32f = jnp.ones(n_b.shape, jnp.float32)
+                bandf = jnp.zeros(n_b.shape, jnp.float32)
             else:
                 # -1 padding passes through: verify_candidates scores it inf
-                ids, dists, n_p, iters, frac = verify_candidates(
-                    Q, cand_ids, self.X, p, k, kappa, prm.tau,
-                    interpret=prm.interpret, cand_base=cand_dists,
-                    base_p=base_p, abandon=prm.abandon,
-                    block_d=prm.abandon_block_d,
-                )
+                ids, dists, n_p, iters, frac, f32f, bandf = \
+                    verify_candidates(
+                        Q, cand_ids, self.X, p, k, kappa, prm.tau,
+                        interpret=prm.interpret, cand_base=cand_dists,
+                        base_p=base_p, abandon=prm.abandon,
+                        block_d=prm.abandon_block_d,
+                        **self._verify_extras(),
+                    )
             phases = self._phase_split(cands, n_p)
             return self._merge_delta(Q, p, k, ids, dists, n_p, iters, n_b,
-                                     hops, base_p, frac, phases)
+                                     hops, base_p, frac, f32f, bandf,
+                                     phases)
         # vector p over one homogeneous base: the traced-p program + the
         # per-row base-metric skip mask, exactly as _search_mixed runs it
-        ids, dists, n_p, iters, frac = verify_candidates(
+        ids, dists, n_p, iters, frac, f32f, bandf = verify_candidates(
             Q, cand_ids, self.X, p, k, kappa, prm.tau,
             interpret=prm.interpret, cand_base=cand_dists, base_p=base_p,
             abandon=prm.abandon, block_d=prm.abandon_block_d,
+            **self._verify_extras(),
         )
-        ids, dists, n_p, frac = mask_base_rows(
+        ids, dists, n_p, frac, f32f, bandf = mask_base_rows(
             cand_ids, cand_dists, ids, dists, n_p, p, base_p, k,
-            n_dim_frac=frac)
+            n_dim_frac=frac, n_f32_frac=f32f, n_band_frac=bandf)
         phases = self._phase_split(cands, n_p)
         p_arr = np.broadcast_to(np.asarray(p, np.float32).reshape(-1),
                                 (int(Q.shape[0]),))
         return self._merge_delta(Q, p_arr, k, ids, dists, n_p, iters, n_b,
-                                 hops, base_p, frac, phases)
+                                 hops, base_p, frac, f32f, bandf, phases)
 
     def _phase_split(self, cands: CandidateSet, n_p):
         """Per-phase (probe, spill) N_b/N_p attribution (DESIGN.md §3).
@@ -568,17 +622,18 @@ class ShardedUHNSW:
         cands = self.search_stage_candidates(Q, base_p, k=k)
         cand_ids, cand_dists = cands.ids, cands.base_dists
         kappa = prm.kappa or max(k // 2, 1)
-        ids, dists, n_p, iters, frac = verify_candidates(
+        ids, dists, n_p, iters, frac, f32f, bandf = verify_candidates(
             Q, cand_ids, self.X, p_vec, k, kappa, prm.tau,
             interpret=prm.interpret, cand_base=cand_dists, base_p=base_p,
             abandon=prm.abandon, block_d=prm.abandon_block_d,
+            **self._verify_extras(),
         )
-        ids, dists, n_p, frac = mask_base_rows(
+        ids, dists, n_p, frac, f32f, bandf = mask_base_rows(
             cand_ids, cand_dists, ids, dists, n_p, p_vec, base_p, k,
-            n_dim_frac=frac)
+            n_dim_frac=frac, n_f32_frac=f32f, n_band_frac=bandf)
         nb_pr, nb_sp, np_pr, np_sp = self._phase_split(cands, n_p)
         return (ids, dists, n_p, iters, cands.n_b, cands.hops, frac,
-                nb_pr, nb_sp, np_pr, np_sp)
+                f32f, bandf, nb_pr, nb_sp, np_pr, np_sp)
 
     def _search_mixed(self, Q, p, k: int):
         """Mixed-p batch: two-way G1/G2 partition, then one delta merge."""
@@ -592,17 +647,23 @@ class ShardedUHNSW:
                   stats.n_p_probe, stats.n_p_spill)
         return self._merge_delta(Q, p_arr, k, ids, dists, stats.n_p,
                                  stats.iterations, stats.n_b, stats.hops,
-                                 stats.base_p, stats.n_dim_frac, phases)
+                                 stats.base_p, stats.n_dim_frac,
+                                 stats.n_f32_rows_frac, stats.n_band_frac,
+                                 phases)
 
     def _merge_delta(self, Q, p, k, ids, dists, n_p, iters, n_b, hops,
-                     base_p, n_dim_frac, phases=None):
+                     base_p, n_dim_frac, n_f32_frac, n_band_frac,
+                     phases=None):
         """Sort-merge exact delta-tier hits into the verified top-k.
 
         With abandonment on, the delta scan inherits the verified top-k's
         k-th-best as its abandon threshold (DESIGN.md §8): buffered
         vectors that provably cannot enter the top-k skip their remaining
         dimension blocks. `n_dim_frac` is then updated as the N_p-weighted
-        mean of the graph-verify fraction and the delta scan's fraction.
+        mean of the graph-verify fraction and the delta scan's fraction;
+        likewise `n_f32_frac`/`n_band_frac` (DESIGN.md §10) — the delta
+        tier is f32-only, so its scans count as full-f32 rows with zero
+        band traffic regardless of `compressed_band`.
         `phases` is the (n_b_probe, n_b_spill, n_p_probe, n_p_spill)
         split from `_phase_split`; delta scans join the N_p total but
         neither phase (they are the mutable tier, not segment work).
@@ -627,15 +688,21 @@ class ShardedUHNSW:
             sd, si = jax.lax.sort((all_d, all_ids), num_keys=1)
             ids, dists = si[:, :k], sd[:, :k]
             delta_frac = d_nd.sum(axis=1).astype(jnp.float32) / (n_delta * d)
-            n_dim_frac = (n_dim_frac * n_p + delta_frac * n_delta) / \
-                jnp.maximum(n_p + n_delta, 1)
+            denom = jnp.maximum(n_p + n_delta, 1)
+            n_dim_frac = (n_dim_frac * n_p + delta_frac * n_delta) / denom
+            # delta rows are full f32 gathers (no compressed replica of
+            # the mutable tier) and contribute no band-dimension traffic
+            n_f32_frac = (n_f32_frac * n_p + 1.0 * n_delta) / denom
+            n_band_frac = (n_band_frac * n_p) / denom
             n_p = n_p + n_delta  # exact-Lp scans count toward N_p
         nb_pr, nb_sp, np_pr, np_sp = phases if phases is not None else (
             n_b, jnp.zeros_like(n_b), n_p, jnp.zeros_like(n_p))
         stats = SearchStats(n_b=n_b, n_p=n_p, iterations=iters, base_p=base_p,
                             hops=hops, n_dim_frac=n_dim_frac,
                             n_b_probe=nb_pr, n_b_spill=nb_sp,
-                            n_p_probe=np_pr, n_p_spill=np_sp)
+                            n_p_probe=np_pr, n_p_spill=np_sp,
+                            n_f32_rows_frac=n_f32_frac,
+                            n_band_frac=n_band_frac)
         return ids, dists, stats
 
     def modeled_query_cost(self, stats: SearchStats, p, d: int) -> dict:
@@ -685,6 +752,10 @@ class ShardedUHNSW:
         self.segments.append(g1, g2, ids)
         self._phase_cache.clear()  # restack invalidates cached sub-stacks
         self.X = jnp.asarray(self._X_host)
+        # the frozen corpus grew: quantize the new rows into a fresh band
+        # (full deterministic rebuild — scales/radii/perm may all shift)
+        self._band = None
+        self._scan_cache = None
         if self._rt is not None:  # restacking dropped the device placement
             self.shard_over(self._rt)
         if self.on_compact is not None:

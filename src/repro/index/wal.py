@@ -79,9 +79,13 @@ def _pack_record(ids: np.ndarray, vecs: np.ndarray) -> bytes:
 class WriteAheadLog:
     """Append-only CRC-framed insert log with fsync-per-batch durability.
 
-    `sync=False` skips the fsync (still flushes to the OS) for tests and
-    throwaway runs; production appends are durable before `append`
-    returns, which is what makes the write-*ahead* ordering meaningful.
+    `path` is created (with the 8-byte header) on first open of an empty
+    or missing file; an existing file is opened append-only, so re-opening
+    a live segment never rewrites history. `sync=False` skips the fsync
+    (still flushes to the OS) for tests and throwaway runs; production
+    appends are durable before `append` returns, which is what makes the
+    write-*ahead* ordering meaningful. Usable as a context manager
+    (closes on exit); `append` after `close()` raises (file is closed).
     """
 
     def __init__(self, path, sync: bool = True):
@@ -101,6 +105,12 @@ class WriteAheadLog:
     def append(self, ids, vecs) -> int:
         """Durably log one insert batch. Returns the file size afterwards
         (the record boundary — crash-consistency tests truncate at these).
+
+        ids: (c,) int-like global ids (stored i64). vecs: (c, d) f32 (a
+        single (d,) vector is promoted to (1, d)). One CRC-framed record
+        + one fsync per call — `DurableIndex.add_batch` rides this as its
+        amortization unit. Raises AssertionError on a length mismatch
+        between ids and vecs.
         """
         ids = np.asarray(ids, dtype=np.int64).reshape(-1)
         vecs = np.ascontiguousarray(vecs, dtype=np.float32)

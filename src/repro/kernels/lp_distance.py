@@ -34,6 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 # (repro.core.lp_ops) so kernel and oracle cannot drift.
 from repro.core.lp_ops import abs_pow as _abs_pow
 from repro.core.lp_ops import (
+    BOUND_SLACK,
     is_static_p,
     lp_entry_bound,
     lp_suffix_bound,
@@ -634,3 +635,213 @@ def gather_lp_abandon_kernel_call(
         ],
         **common,
     )(ids, q, thresh, sb, x)
+
+
+# ---------------------------------------------------------------------------
+# compressed-band screen kernel (DESIGN.md §10): ids (B, C) + thresholds
+# (B, 1) + base sums (B, C) + int8 codes (n, d) + scale/radius (1, d)
+#   -> keep (B, C) int32 0/1, nd (B, C) int32 band dimensions scanned
+#
+# The storage-side sibling of the abandon kernel: instead of gathering f32
+# rows and accumulating *exact* partial power sums, it gathers int8 band
+# rows (1/4 the DMA bytes) and accumulates the certified per-coordinate
+# lower bound max(|q_j - x̂_j| - radius_j, 0)^p (index/compressed.py).
+# A candidate whose deflated running bound exceeds the per-query threshold
+# provably cannot enter the top-k, so the two-band scan never issues its
+# f32 gather — the screen's survivors are the only rows the exact rerank
+# touches. Same transposed (d, TC) layout, same per-block lax.cond alive
+# gating, same entry/suffix bounds from the beam's base power sums as the
+# abandon kernel; the suffix bound's scanned base mass accumulates the
+# per-coordinate *upper* bounds (|q_j - x̂_j| + radius_j) so the remaining
+# mass stays an underestimate. Because the accumulated sum is a float-
+# evaluated bound (not an exact partial of the true distance), every kill
+# comparison deflates by BOUND_SLACK.
+# ---------------------------------------------------------------------------
+
+
+def _screen_row(ids_row, qi, thr, sb_row, pi, scale_col, radius_col,
+                codes_hbm, gx_ref, sem,
+                *, base_p: float, n: int, block_c: int, block_d: int):
+    """One query row of the compressed screen. Returns (keep, nd) (TC,)."""
+    d = qi.shape[0]
+    nb = d // block_d
+    deflate = 1.0 - BOUND_SLACK
+    valid = (ids_row >= 0) & (ids_row < n)
+    lb = lp_entry_bound(sb_row, base_p, pi, d)
+    alive0 = valid & (lb <= thr)
+
+    def dead_row(_):
+        return (jnp.zeros((block_c,), jnp.int32),
+                jnp.zeros((block_c,), jnp.int32))
+
+    def scan_row(_):
+        _dma_gather_rows(ids_row, codes_hbm, gx_ref, sem, n, block_c)
+        # dequant + subtract once; dimension blocks below are sublane
+        # slices of this (d, TC) |q - x̂| tile
+        a0 = jnp.abs(
+            gx_ref[...].astype(jnp.float32).T * scale_col - qi[:, None])
+
+        def block_step(b, carry):
+            s, sbase, alive, nd = carry
+
+            def compute(args):
+                s, sbase, alive, nd = args
+                blk = jax.lax.dynamic_slice(
+                    a0, (b * block_d, 0), (block_d, block_c))
+                rblk = jax.lax.dynamic_slice(
+                    radius_col, (b * block_d, 0), (block_d, 1))
+                al = jnp.maximum(blk - rblk, 0.0)   # certified lower bounds
+                au = blk + rblk                     # upper bounds (suffix)
+                bs = jnp.sum(pow_from_abs(al, pi), axis=0)
+                bb = jnp.sum(au if base_p == 1.0 else au * au, axis=0)
+                s = jnp.where(alive, s + bs, s)
+                sbase = jnp.where(alive, sbase + bb, sbase)
+                nd = nd + jnp.where(alive, block_d, 0)
+                dead = s * deflate > thr
+                d_rem = (d - (b + 1) * block_d).astype(jnp.float32)
+                rem = lp_suffix_bound(sb_row - sbase, base_p, pi, d_rem)
+                dead = dead | ((d_rem > 0) & ((s + rem) * deflate > thr))
+                return (s, sbase, alive & ~dead, nd)
+
+            return jax.lax.cond(jnp.any(carry[2]), compute,
+                                lambda args: args, carry)
+
+        s0 = jnp.zeros((block_c,), jnp.float32)
+        carry = (s0, s0, alive0, jnp.zeros((block_c,), jnp.int32))
+        _, _, alive, nd = jax.lax.fori_loop(0, nb, block_step, carry)
+        return alive.astype(jnp.int32), nd
+
+    return jax.lax.cond(jnp.any(alive0), scan_row, dead_row, 0)
+
+
+def _gather_screen_kernel(ids_ref, q_ref, th_ref, sb_ref, sc_ref, rad_ref,
+                          codes_hbm, keep_ref, nd_ref, gx_ref, sem,
+                          *, p: float, base_p: float, n: int,
+                          block_c: int, block_d: int):
+    tb = q_ref.shape[0]
+    scale_col = sc_ref[...].astype(jnp.float32).T    # (d, 1)
+    radius_col = rad_ref[...].astype(jnp.float32).T  # (d, 1)
+
+    def per_query(i, _):
+        keep, nd = _screen_row(
+            ids_ref[i, :], q_ref[i, :].astype(jnp.float32), th_ref[i, 0],
+            sb_ref[i, :], p, scale_col, radius_col, codes_hbm, gx_ref, sem,
+            base_p=base_p, n=n, block_c=block_c, block_d=block_d,
+        )
+        keep_ref[i, :] = keep
+        nd_ref[i, :] = nd
+        return 0
+
+    jax.lax.fori_loop(0, tb, per_query, 0)
+
+
+def _gather_screen_vec_kernel(ids_ref, q_ref, th_ref, sb_ref, p_ref, sc_ref,
+                              rad_ref, codes_hbm, keep_ref, nd_ref, gx_ref,
+                              sem, *, base_p: float, n: int,
+                              block_c: int, block_d: int):
+    """Mixed-p variant: each query row screened under its own traced p."""
+    tb = q_ref.shape[0]
+    scale_col = sc_ref[...].astype(jnp.float32).T
+    radius_col = rad_ref[...].astype(jnp.float32).T
+
+    def per_query(i, _):
+        keep, nd = _screen_row(
+            ids_ref[i, :], q_ref[i, :].astype(jnp.float32), th_ref[i, 0],
+            sb_ref[i, :], p_ref[i, 0], scale_col, radius_col, codes_hbm,
+            gx_ref, sem,
+            base_p=base_p, n=n, block_c=block_c, block_d=block_d,
+        )
+        keep_ref[i, :] = keep
+        nd_ref[i, :] = nd
+        return 0
+
+    jax.lax.fori_loop(0, tb, per_query, 0)
+
+
+def gather_lp_screen_kernel_call(
+    ids: jax.Array,     # (B, C) int32 candidate ids; out-of-range = padding
+    q: jax.Array,       # (B, d) queries, band (permuted) coordinate order
+    thresh: jax.Array,  # (B, 1) per-query screen bound (power-sum space;
+                        # -inf = row frozen, +inf = keep everything)
+    sb: jax.Array,      # (B, C) base-metric power sums (0 = no bound info)
+    scale: jax.Array,   # (1, d) f32 per-coordinate dequant scales
+    radius: jax.Array,  # (1, d) f32 per-coordinate max dequant error
+    codes: jax.Array,   # (n, d) int8 HBM-resident compressed band
+    p,
+    *,
+    base_p: float = 1.0,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_d: int = 32,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw pallas_call for pre-padded inputs (B % block_b == C % block_c == 0,
+    d % block_d == 0). Returns (keep (B, C) int32 — 1 iff the candidate
+    survived the screen and its f32 row must be gathered for the exact
+    rerank, nd (B, C) int32 band dimensions scanned).
+
+    p: Python float, or a pre-padded (B, 1) f32 array (one metric per
+    query row — the mixed-p contract in the module preamble). base_p
+    (static 1.0 or 2.0) names the metric of `sb` for the entry/suffix
+    bounds. scale/radius ride as (1, d) operands pinned per grid step.
+    """
+    b, d = q.shape
+    b2, cc = ids.shape
+    n = codes.shape[0]
+    assert b == b2 and b % block_b == 0 and cc % block_c == 0, \
+        (b, b2, cc, block_b, block_c)
+    assert d % block_d == 0, (d, block_d)
+    assert scale.shape == (1, d) and radius.shape == (1, d), \
+        (scale.shape, radius.shape, d)
+
+    common = dict(
+        grid=(b // block_b, cc // block_c),
+        out_specs=(
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, cc), jnp.int32),
+            jax.ShapeDtypeStruct((b, cc), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_c, d), jnp.int8),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )
+    if not is_static_p(p):
+        assert p.shape == (b, 1), (p.shape, b)
+        return pl.pallas_call(
+            functools.partial(
+                _gather_screen_vec_kernel, base_p=base_p, n=n,
+                block_c=block_c, block_d=block_d,
+            ),
+            in_specs=[
+                pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+                pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+                pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+                pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),  # codes stay in HBM
+            ],
+            **common,
+        )(ids, q, thresh, sb, p, scale, radius, codes)
+    return pl.pallas_call(
+        functools.partial(
+            _gather_screen_kernel, p=float(p), base_p=base_p, n=n,
+            block_c=block_c, block_d=block_d,
+        ),
+        in_specs=[
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # codes stay in HBM
+        ],
+        **common,
+    )(ids, q, thresh, sb, scale, radius, codes)

@@ -575,6 +575,166 @@ def lp_gather_abandon(
         interpret, block_b, block_c, block_d)
 
 
+def _pick_tiles_screen(b: int, c: int, d: int) -> tuple[int, int]:
+    """Choose (TB, TC) for the compressed-band screen kernel.
+
+    Like `_pick_tiles_abandon` but the gathered-rows scratch is int8
+    (1 byte/dim) while the dequantized |q - x̂| tile stays f32:
+    ~ tc*d + 4*(tb*d + tc*d + 3*tb*tc) bytes.
+    """
+    tb = min(8, _round_up(b, 8))
+    tc = _LANE
+    while tc < min(512, c):
+        tc *= 2
+    while tc > _LANE and \
+            tc * d + 4 * (tb * d + tc * d + 3 * tb * tc) > _VMEM_BUDGET:
+        tc //= 2
+    return max(tb, 8), max(tc, _LANE)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p", "base_p", "interpret", "block_b", "block_c",
+                     "block_d"),
+)
+def _lp_gather_screen_s(
+    q: jax.Array,
+    ids: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    radius: jax.Array,
+    thresh: jax.Array,
+    sb: jax.Array,
+    p: float,
+    base_p: float,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+    block_d: int | None = None,
+):
+    b, d = q.shape
+    bd = block_d or pick_abandon_block_d(d)
+    if interpret is None and not _on_tpu():
+        from repro.kernels.ref import gather_lp_screen_ref
+
+        return gather_lp_screen_ref(q, ids, codes, scale, radius, thresh,
+                                    sb, p, base_p, bd)
+    if interpret is None:
+        interpret = False
+    _, cc = ids.shape
+    tb, tc = _pick_tiles_screen(b, cc, d)
+    if block_b is not None:
+        tb = block_b
+    if block_c is not None:
+        tc = block_c
+    bp, cp = _round_up(b, tb), _round_up(cc, tc)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    ip = jnp.pad(ids.astype(jnp.int32), ((0, bp - b), (0, cp - cc)),
+                 constant_values=-1)
+    # padding rows get threshold -inf: every candidate dies at entry, so
+    # the kernel skips their DMA gathers entirely
+    tp = _pad_axis(thresh.astype(jnp.float32), 0, bp, -jnp.inf)[:, None]
+    sp = _pad_axis(_pad_axis(sb.astype(jnp.float32), 1, cp, 0.0), 0, bp, 0.0)
+    keep, nd = _k.gather_lp_screen_kernel_call(
+        ip, qp, tp, sp, scale.reshape(1, d), radius.reshape(1, d), codes,
+        p, base_p=base_p, block_b=tb, block_c=tc, block_d=bd,
+        interpret=interpret,
+    )
+    return keep[:b, :cc].astype(bool), nd[:b, :cc]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("base_p", "interpret", "block_b", "block_c", "block_d"),
+)
+def _lp_gather_screen_v(
+    q: jax.Array,
+    ids: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    radius: jax.Array,
+    thresh: jax.Array,
+    sb: jax.Array,
+    p: jax.Array,    # (B,) per-query metric
+    base_p: float,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+    block_d: int | None = None,
+):
+    b, d = q.shape
+    p = jnp.broadcast_to(p, (b,))  # (1,) = "one p for every row"
+    bd = block_d or pick_abandon_block_d(d)
+    if interpret is None and not _on_tpu():
+        from repro.kernels.ref import gather_lp_screen_ref
+
+        return gather_lp_screen_ref(q, ids, codes, scale, radius, thresh,
+                                    sb, p, base_p, bd)
+    if interpret is None:
+        interpret = False
+    _, cc = ids.shape
+    tb, tc = _pick_tiles_screen(b, cc, d)
+    if block_b is not None:
+        tb = block_b
+    if block_c is not None:
+        tc = block_c
+    bp, cp = _round_up(b, tb), _round_up(cc, tc)
+    qp = _pad_axis(q, 0, bp, 0.0)
+    ip = jnp.pad(ids.astype(jnp.int32), ((0, bp - b), (0, cp - cc)),
+                 constant_values=-1)
+    tp = _pad_axis(thresh.astype(jnp.float32), 0, bp, -jnp.inf)[:, None]
+    sp = _pad_axis(_pad_axis(sb.astype(jnp.float32), 1, cp, 0.0), 0, bp, 0.0)
+    keep, nd = _k.gather_lp_screen_kernel_call(
+        ip, qp, tp, sp, scale.reshape(1, d), radius.reshape(1, d), codes,
+        _pad_p_col(p, bp), base_p=base_p, block_b=tb, block_c=tc,
+        block_d=bd, interpret=interpret,
+    )
+    return keep[:b, :cc].astype(bool), nd[:b, :cc]
+
+
+def lp_gather_screen(
+    q: jax.Array,       # (B, d) f32 queries, band (permuted) coord order
+    ids: jax.Array,     # (B, C) int32 candidate ids; out-of-range = padding
+    codes: jax.Array,   # (n, d) int8 compressed band (index/compressed.py)
+    scale: jax.Array,   # (d,) f32 per-coordinate dequant scales
+    radius: jax.Array,  # (d,) f32 per-coordinate max dequant error
+    thresh: jax.Array,  # (B,) per-query screen bound (power-sum space;
+                        # +inf = keep everything, -inf = screen out the row)
+    sb: jax.Array,      # (B, C) base-metric power sums of the candidates
+                        # (the beam's distances), or 0 to disable bounds
+    p,
+    base_p: float = 1.0,
+    interpret: bool | None = None,
+    block_b: int | None = None,
+    block_c: int | None = None,
+    block_d: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Compressed-band candidate screen (DESIGN.md §10) -> (keep, nd).
+
+    The storage-side sibling of `lp_gather_abandon`: per-query thresholds
+    kill candidates whose *certified lower bound* — the blocked power sum
+    of max(|q_j - x̂_j| - radius_j, 0) over int8 band rows, deflated by
+    BOUND_SLACK — already exceeds the running k-th best. `keep` (B, C)
+    bool marks the survivors whose f32 rows the exact rerank must gather
+    (padding never survives); `nd` (B, C) int32 counts band dimensions
+    scanned (the int8 byte-traffic numerator of `SearchStats.n_band_frac`).
+
+    q must be in the band's coordinate order (Q[:, band.perm]). p follows
+    the scalar-vs-vector contract (DESIGN.md §6); base_p (static 1.0/2.0)
+    names the metric of `sb`. Dispatch matches `lp_gather_abandon`: fused
+    Pallas kernel on TPU, the blocked jnp reference (kernels/ref.py) off
+    TPU, `interpret=True` for CPU kernel-parity tests.
+    """
+    if is_static_p(p):
+        return _lp_gather_screen_s(q, ids, codes, scale, radius, thresh,
+                                   sb, float(p), float(base_p), interpret,
+                                   block_b, block_c, block_d)
+    return _lp_gather_screen_v(
+        q, ids, codes, scale, radius, thresh, sb,
+        jnp.atleast_1d(jnp.asarray(p, jnp.float32)), float(base_p),
+        interpret, block_b, block_c, block_d)
+
+
 def lp_gather_distance(
     q: jax.Array,    # (B, d) f32 queries
     ids: jax.Array,  # (B, C) int32 candidate ids; anything outside [0, n) is

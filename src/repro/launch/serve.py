@@ -61,7 +61,10 @@ def serve_retrieval(args) -> int:
     injector = FaultInjector(rate=args.fault_rate, seed=args.fault_seed) \
         if args.fault_rate > 0 else None
     ds = make_dataset("deep", n=args.n, n_queries=128, seed=args.seed)
-    params = UHNSWParams(t=200)
+    # --compressed: two-band verification (DESIGN.md §10) — candidates are
+    # screened against the int8 band and only survivors gather f32 rows;
+    # results are bitwise-identical, f32-rows tells what the screen saved
+    params = UHNSWParams(t=200, compressed_band=args.compressed)
     if args.state_dir:
         # durable lifecycle: recover an existing state dir (snapshot + WAL
         # replay, bit-identical) or snapshot a fresh build into it
@@ -107,7 +110,11 @@ def serve_retrieval(args) -> int:
           # effective T_p under early-abandoning verification (DESIGN.md
           # §8); no verification at all (n_p == 0) means full-dim = 1.0
           f"dim-scan="
-          f"{st['dim_frac_w'] / st['n_p'] if st['n_p'] else 1.0:.2f}; "
+          f"{st['dim_frac_w'] / st['n_p'] if st['n_p'] else 1.0:.2f} "
+          # f32 rows gathered per scored candidate (DESIGN.md §10); 1.0
+          # without --compressed, < 1 when the int8 screen is saving HBM
+          f"f32-rows="
+          f"{st['f32_rows_w'] / st['n_p'] if st['n_p'] else 1.0:.2f}; "
           f"latency p50={lat['p50']:.0f}ms p95={lat['p95']:.0f}ms")
     # engine scheduling outcomes (DESIGN.md §6): why batches dispatched,
     # what admission control did, and where each request's time went
@@ -141,7 +148,9 @@ def serve_retrieval(args) -> int:
             print(f"  {name}: {pb['queries']} queries / {pb['batches']} "
                   f"batches, avg N_b={pb['n_b'] / pb['queries']:.0f} "
                   f"N_p={pb['n_p'] / pb['queries']:.0f} dim-scan="
-                  f"{pb['dim_frac_w'] / pb['n_p'] if pb['n_p'] else 1.0:.2f}")
+                  f"{pb['dim_frac_w'] / pb['n_p'] if pb['n_p'] else 1.0:.2f}"
+                  f" f32-rows="
+                  f"{pb['f32_rows_w'] / pb['n_p'] if pb['n_p'] else 1.0:.2f}")
     return 0
 
 
@@ -169,6 +178,10 @@ def main(argv=None) -> int:
                     help="durable index state: recover from this directory "
                          "if it holds a snapshot, else snapshot the fresh "
                          "build into it (inserts ride the WAL)")
+    ap.add_argument("--compressed", action="store_true",
+                    help="two-band verification over the int8 compressed "
+                         "band (DESIGN.md §10): bitwise-identical results, "
+                         "f32 row gathers only for screen survivors")
     args = ap.parse_args(argv)
     return serve_retrieval(args) if args.retrieval else serve_lm(args)
 

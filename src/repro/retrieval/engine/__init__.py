@@ -105,6 +105,10 @@ def default_stats() -> dict:
         # early-abandoning verify buckets report effective T_p as
         # dim_frac_w / n_p (1.0 = full-dimension scans everywhere)
         "dim_frac_w": 0.0,
+        # N_p-weighted f32 rows gathered (DESIGN.md §10): the compressed
+        # two-band path reports gathered-f32-bytes reduction as
+        # n_p / f32_rows_w (1.0 = every scored candidate hit f32 HBM)
+        "f32_rows_w": 0.0,
         "padded_rows": 0,            # bucket-padding rows executed
         "queue_peak": 0,             # high-water queue depth
         # engine scheduling outcomes
@@ -120,9 +124,9 @@ def default_stats() -> dict:
         # requested p, each with its own Eq. 1 split
         "per_base": {
             "G1": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
-                   "dim_frac_w": 0.0},
+                   "dim_frac_w": 0.0, "f32_rows_w": 0.0},
             "G2": {"queries": 0, "batches": 0, "n_b": 0.0, "n_p": 0.0,
-                   "dim_frac_w": 0.0},
+                   "dim_frac_w": 0.0, "f32_rows_w": 0.0},
         },
         "per_p": {},                 # "%g" % p -> {queries, n_b, n_p}
         # per-request latency; bounded so a long-running service cannot
@@ -458,12 +462,13 @@ class ServingEngine:
     # -- collection + stats --------------------------------------------------
 
     def _collect(self, wave: Wave) -> None:
-        ids, dists, n_b, n_p, frac, phases = self.pipeline.collect(wave)
+        ids, dists, n_b, n_p, frac, f32, phases = self.pipeline.collect(wave)
         done = self.clock()
         shape_key = (wave.base, wave.k, wave.exact, wave.size)
         cold = shape_key not in self._seen_shapes
         self._seen_shapes.add(shape_key)
         frac_w = float((frac * n_p).sum())
+        f32_w = float((f32 * n_p).sum())
         nb_pr, nb_sp, np_pr, np_sp = phases
         st = self.stats
         st["queries"] += wave.n_real
@@ -476,12 +481,14 @@ class ServingEngine:
         st["n_p_probe"] += float(np_pr.sum())
         st["n_p_spill"] += float(np_sp.sum())
         st["dim_frac_w"] += frac_w
+        st["f32_rows_w"] += f32_w
         pb = st["per_base"]["G1" if wave.base == 1.0 else "G2"]
         pb["queries"] += wave.n_real
         pb["batches"] += 1
         pb["n_b"] += float(n_b.sum())
         pb["n_p"] += float(n_p.sum())
         pb["dim_frac_w"] += frac_w
+        pb["f32_rows_w"] += f32_w
         for i, r in enumerate(wave.requests):
             r.finish_t = done
             self._results[r.request_id] = (ids[i], dists[i])

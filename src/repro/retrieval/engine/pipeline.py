@@ -132,11 +132,13 @@ class TwoStagePipeline:
 
     def collect(self, wave: Wave):
         """Materialize one wave on host (the pipeline's only blocking
-        point). Returns (ids, dists, n_b, n_p, frac, phases) sliced to
-        real rows; phases is the per-phase (n_b_probe, n_b_spill,
-        n_p_probe, n_p_spill) attribution from the sharded two-phase
-        search (probe = everything, spill = 0 for monolithic indexes and
-        the independent policy).
+        point). Returns (ids, dists, n_b, n_p, frac, f32, phases) sliced
+        to real rows; `f32` is the per-row f32-rows-gathered fraction
+        (DESIGN.md §10 — 1.0 off the compressed two-band path); phases
+        is the per-phase (n_b_probe, n_b_spill, n_p_probe, n_p_spill)
+        attribution from the sharded two-phase search (probe =
+        everything, spill = 0 for monolithic indexes and the independent
+        policy).
         """
         ids, dists, st = wave.result
         n = wave.n_real
@@ -150,10 +152,11 @@ class TwoStagePipeline:
         n_b = rows(st.n_b)
         n_p = rows(st.n_p)
         frac = rows(st.n_dim_frac)
+        f32 = rows(st.n_f32_rows_frac)
         nb_pr, nb_sp = st.phase_n_b()
         np_pr, np_sp = st.phase_n_p()
         phases = (rows(nb_pr), rows(nb_sp), rows(np_pr), rows(np_sp))
         wave.result = None
         for r in wave.requests:
             r.stage = DONE
-        return ids, dists, n_b, n_p, frac, phases
+        return ids, dists, n_b, n_p, frac, f32, phases

@@ -359,6 +359,8 @@ class UniversalVectorService:
         # N_p-weighted scanned-dim fraction (1.0 on full-dimension paths)
         frac = rows(stats.n_dim_frac)
         frac_w = float((frac * n_p).sum())
+        # N_p-weighted f32-rows fraction (DESIGN.md §10 two-band scan)
+        f32_w = float((rows(stats.n_f32_rows_frac) * n_p).sum())
         # per-phase attribution (probe == total for monolithic/independent)
         nb_pr, nb_sp = stats.phase_n_b()
         np_pr, np_sp = stats.phase_n_p()
@@ -378,12 +380,14 @@ class UniversalVectorService:
         st["n_p_probe"] += float(np_pr.sum())
         st["n_p_spill"] += float(np_sp.sum())
         st["dim_frac_w"] += frac_w
+        st["f32_rows_w"] += f32_w
         pb = st["per_base"]["G1" if base == 1.0 else "G2"]
         pb["queries"] += n_real
         pb["batches"] += 1
         pb["n_b"] += float(n_b.sum())
         pb["n_p"] += float(n_p.sum())
         pb["dim_frac_w"] += frac_w
+        pb["f32_rows_w"] += f32_w
         for i, (r, t0) in enumerate(chunk):
             out[r.request_id] = (ids[i], dists[i])
             pp = st["per_p"].setdefault(

@@ -300,7 +300,7 @@ def test_verify_abandon_padding_rows():
                             -1, n)
     cand_base = np.asarray(cand_base).copy()
     cand_base[:, 15:] = np.inf
-    ids, dists, n_p, _, frac = verify_candidates(
+    ids, dists, n_p, _, frac, *_ = verify_candidates(
         q, jnp.asarray(cand), x, 0.8, 10, 5, 0.92,
         cand_base=jnp.asarray(cand_base), base_p=1.0, abandon=True)
     assert np.all(np.asarray(ids) >= 0) and np.all(np.asarray(ids) < n)
@@ -312,7 +312,7 @@ def test_verify_abandon_false_is_legacy_bitwise():
     bit-for-bit (pinned against a hand-rolled sort-merge reference)."""
     q, x, cand, _ = _verify_case(d=32)
     k, kappa, tau, p = 10, 5, 0.92, 0.8
-    ids, dists, n_p, iters, frac = verify_candidates(
+    ids, dists, n_p, iters, frac, *_ = verify_candidates(
         q, cand, x, p, k, kappa, tau, abandon=False)
     assert np.all(np.asarray(frac) == 1.0)
     # reference: the legacy loop in numpy (full-dimension, lax.sort merge)

@@ -118,6 +118,30 @@ SPECS = {
             "ids_equal": ("bool-true", None),
         },
     },
+    # compressed-band two-band verification (DESIGN.md §10): screen_out is
+    # the tentpole metric (fraction of f32 row gathers the certified int8
+    # screen avoided — higher is better), bytes_ratio the honest total-
+    # bandwidth cost (band reads + surviving f32 reads, relative to the
+    # uncompressed path — lower is better). ids_equal flipping means the
+    # lower bound stopped being admissible: hard fail. The absolute checks
+    # pin the ISSUE 9 flagship acceptance — >= 2x f32-byte reduction at
+    # p in {0.5, 0.8} — so a regenerated baseline can never loosen it.
+    "compressed": {
+        "keys": ("dataset", "d", "p"),
+        "metrics": {
+            "screen_out": ("higher", (0.20, 0.02)),
+            "bytes_ratio": ("lower", (0.20, 0.02)),
+            "n_dim_frac": ("lower", (0.20, 0.02)),
+            "ids_equal": ("bool-true", None),
+        },
+        "absolute": [
+            {"match": {"p": 0.5}, "metric": "f32_bytes_reduction",
+             "op": "min", "limit": 2.0},
+            {"match": {"p": 0.8}, "metric": "f32_bytes_reduction",
+             "op": "min", "limit": 2.0},
+            {"match": {"p": 2.0}, "metric": "ids_equal", "op": "true"},
+        ],
+    },
 }
 
 
@@ -426,9 +450,33 @@ def selftest(baseline_dir: Path, benches: list[str]) -> int:
                 print("selftest FAIL: an ids-parity flip slipped through "
                       "the sharded gate")
                 return 1
+        if "compressed" in found:
+            payload = _load(baseline_dir / "BENCH_compressed.json")
+            sconly = json.loads(json.dumps(payload))
+            touched = 0
+            for row in sconly.get("rows", []):
+                if "screen_out" in row:
+                    # the screen silently letting half its kills through:
+                    # f32 rows gathered goes up, only screen_out moves here
+                    row["screen_out"] = round(
+                        float(row["screen_out"]) * 0.5, 4)
+                    touched += 1
+            if not touched:
+                print("selftest FAIL: compressed baseline has no screen_out"
+                      " rows to regress — screen gate untestable")
+                return 1
+            tmpsc = Path(td) / "screen"
+            tmpsc.mkdir()
+            (tmpsc / "BENCH_compressed.json").write_text(json.dumps(sconly))
+            print("selftest phase 6: injected screen-out-only compressed "
+                  "regression (must fail)")
+            if run_check(baseline_dir, tmpsc, ["compressed"]) == 0:
+                print("selftest FAIL: a 2x screen-out regression slipped "
+                      "through the compressed gate")
+                return 1
     print("selftest PASS: gate is live (self-compare clean, 25% regression "
-          "caught, p50-only latency regression caught, sharded N_b and "
-          "ids-parity regressions caught)")
+          "caught, p50-only latency regression caught, sharded N_b, "
+          "ids-parity, and compressed screen-out regressions caught)")
     return 0
 
 
@@ -438,7 +486,7 @@ def main(argv=None) -> int:
                     default=ROOT / "results" / "baselines" / "quick")
     ap.add_argument("--fresh", type=Path, default=ROOT / "results")
     ap.add_argument("--benches", type=str,
-                    default="build,beam,serving,verify,sharded")
+                    default="build,beam,serving,verify,sharded,compressed")
     ap.add_argument("--selftest", action="store_true",
                     help="inject a 25% regression and assert the gate trips")
     ap.add_argument("--expect-quick", action="store_true",

@@ -2,9 +2,9 @@
 
 Checks, exiting non-zero with a findings list on any failure:
 
-  1. Markdown links in README.md / DESIGN.md that point at local files
-     resolve (and their #anchors, if any, match a heading's GitHub slug
-     in the target file).
+  1. Markdown links in README.md / DESIGN.md / docs/BENCHMARKS.md that
+     point at local files resolve (and their #anchors, if any, match a
+     heading's GitHub slug in the target file).
   2. Every `DESIGN.md §X` / `DESIGN §X` citation — in README.md,
      DESIGN.md, and every .py docstring/comment under src/, examples/,
      benchmarks/, tests/ — names a section heading that actually exists
@@ -23,7 +23,8 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
-DOCS = [ROOT / "README.md", ROOT / "DESIGN.md"]
+DOCS = [ROOT / "README.md", ROOT / "DESIGN.md",
+        ROOT / "docs" / "BENCHMARKS.md"]
 PY_DIRS = ["src", "examples", "benchmarks", "tests", "tools"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
