@@ -67,6 +67,7 @@ def main(argv=None) -> int:
         "beam": beam_width.run,
         "roofline": roofline.run,
         "serving": serving.run,
+        "health": serving.run_faulted,
         "verify": verify.run,
         "compressed": compressed.run,
     }

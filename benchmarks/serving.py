@@ -327,5 +327,169 @@ def run(quick: bool = False):
     return rows
 
 
+# -- faulted-stream degraded serving (DESIGN.md §11) -----------------------
+#
+# The robustness counterpart of the scheduling rows above: the same engine
+# over a durable 8-segment index, serving one clean pass and one chaos
+# pass — one flaky segment's fault site injected at rate FAULT_RATE plus
+# one mid-stream NaN-poisoned segment (detected by the query-time guard,
+# bisected to the segment, quarantined, restored from the snapshot and
+# canary-readmitted by background maintenance). Reported: achieved
+# coverage, faulted/clean throughput and p50 ratios, and the hard zero:
+# no poisoned id in any faulted-stream result.
+
+FAULT_RATE = 0.05
+N_SEGMENTS = 8
+POISON_SEG = 3
+FLAKY_SEG = 1
+
+
+def run_faulted(quick: bool = False):
+    import os
+    import tempfile
+
+    from repro.core.uhnsw import UHNSWParams
+    from repro.index import DurableIndex, ShardedUHNSW
+    from repro.retrieval.engine import FaultInjector
+    from repro.retrieval.engine.faults import poison_segment, segment_site
+
+    name = "sun" if quick else "deep"
+    t = 100 if quick else 150
+    # streams long enough that the one-off poison event (wasted wave +
+    # bisection probes + snapshot restore) amortizes: the gated ratio
+    # measures sustained degraded throughput, not the event spike
+    n_requests = 128 if quick else 192
+    n_streams = 4 if quick else 6
+    seed = int(os.environ.get("REPRO_SEGFAULT_SEED", "0"))
+    ds = get_dataset(name)
+    ps = _p_grid(4)
+
+    t0 = time.perf_counter()
+    index = ShardedUHNSW.build(ds.data, num_segments=N_SEGMENTS, m=12,
+                               params=UHNSWParams(t=t), seed=0)
+    print(f"  built {N_SEGMENTS}-segment {name} in "
+          f"{time.perf_counter() - t0:.0f}s", flush=True)
+
+    def streams(offset):
+        return [_make_stream(ds, ps, n_requests, seed=offset + i)[0]
+                for i in range(n_streams)]
+
+    def serve_all(service, reqs_list):
+        dt = 0.0
+        outs = []
+        for reqs in reqs_list:
+            out, d = _timed(service.serve, reqs)
+            outs.append(out)
+            dt += d
+        return outs, dt
+
+    with tempfile.TemporaryDirectory() as td:
+        dur = DurableIndex.create(index, td)
+        # one persistently flaky segment at rate 0.05 per wave (the
+        # "segment" wildcard would compound to 1-0.95^8 = 34% of waves
+        # faulting — a different scenario than the advertised 5%), plus a
+        # mid-stream NaN poisoning of a *different* segment so both the
+        # EWMA-retry path and the quarantine/recovery path are measured
+        injector = FaultInjector(rate=FAULT_RATE, seed=seed,
+                                 sites=(segment_site(FLAKY_SEG),))
+        service = UniversalVectorService(index=dur, max_batch=64,
+                                         fault_injector=injector,
+                                         min_coverage=0.5)
+        eng = service.engine
+
+        # warm every ladder shape, then pre-warm the degraded-mask and
+        # bisection-probe programs (poison -> detect -> restore) so the
+        # measured chaos pass pays chaos, not compiles
+        eng.warmup(k=K, ps=tuple(ps))
+        keep, eng.fault_injector = eng.fault_injector, None
+        serve_all(service, streams(900))
+        gids = poison_segment(dur, POISON_SEG)
+        serve_all(service, streams(910))     # detect + quarantine (compile)
+        eng.pump()                           # restore + readmit (compile)
+        assert dur.health.alive() == list(range(N_SEGMENTS))
+        eng.fault_injector = keep
+        injector.reset()
+
+        # -- clean pass (injector detached, index fully healthy) ---------
+        eng.fault_injector = None
+        base = dict(service.stats)
+        service.stats["latency_ms"].clear()      # per-pass p50 windows
+        service.stats["latency_records"].clear()
+        clean_outs, clean_dt = serve_all(service, streams(1000))
+        clean_lat = service.latency_summary()
+        n_served_clean = sum(len(o) for o in clean_outs)
+
+        # -- faulted pass: segment-site chaos + one mid-stream poison ----
+        # (counters are cumulative over the service lifetime — the warmup
+        # pass above deliberately poisons/recovers once to compile those
+        # paths, so the row must report measured-pass deltas)
+        eng.fault_injector = injector
+        q0 = service.stats["queries"]
+        cov0 = service.stats["coverage_w"]
+        ctr0 = {key: int(service.stats[key])
+                for key in ("poison_detected", "seg_quarantined",
+                            "seg_recovered")}
+        service.stats["latency_ms"].clear()
+        service.stats["latency_records"].clear()
+        fault_dt = 0.0
+        outs = []
+        for i, reqs in enumerate(streams(2000)):
+            if i == n_streams // 2:          # mid-stream corruption
+                poison_segment(dur, POISON_SEG)
+            out, d = _timed(service.serve, reqs)
+            outs.append(out)
+            fault_dt += d
+        fault_lat = service.latency_summary()
+        n_served = sum(len(o) for o in outs)
+        st = service.stats
+        coverage_mean = ((st["coverage_w"] - cov0)
+                         / max(st["queries"] - q0, 1))
+        # the hard zero applies to the stream served WHILE the segment
+        # held poisoned rows (quarantine keeps them out of every result);
+        # once background maintenance restores + readmits the segment, its
+        # ids are clean again and legitimately servable
+        poisoned = set(map(int, gids))
+        leaked = {int(i)
+                  for ids, _ in outs[n_streams // 2].values()
+                  for i in np.asarray(ids) if int(i) >= 0} & poisoned
+        recovered_all = dur.health.alive() == list(range(N_SEGMENTS))
+
+    qps_clean = n_served_clean / clean_dt
+    qps_fault = n_served / fault_dt
+    row = {
+        "bench": "health", "dataset": name, "segments": N_SEGMENTS,
+        "fault_rate": FAULT_RATE, "requests": n_streams * n_requests,
+        "seed": seed,
+        "served": n_served,
+        "failed": int(st["failed"] - base.get("failed", 0)),
+        "coverage_mean": round(float(coverage_mean), 4),
+        "clean_qps": round(qps_clean, 1),
+        "faulted_qps": round(qps_fault, 1),
+        "throughput_ratio": round(qps_fault / qps_clean, 3),
+        "p50_ratio": round(fault_lat["p50"] / max(clean_lat["p50"], 1e-9), 3),
+        "no_poisoned_ids": not leaked,
+        "poison_detected": int(st["poison_detected"]) - ctr0["poison_detected"],
+        "seg_quarantined": int(st["seg_quarantined"]) - ctr0["seg_quarantined"],
+        "seg_recovered": int(st["seg_recovered"]) - ctr0["seg_recovered"],
+        "injected_faults": int(injector.injected),
+        "recovered_all_segments": bool(recovered_all),
+    }
+    print(f"  chaos rate={FAULT_RATE}: coverage {row['coverage_mean']}, "
+          f"throughput {row['throughput_ratio']}x clean "
+          f"({row['faulted_qps']} vs {row['clean_qps']} qps), "
+          f"p50 ratio {row['p50_ratio']}; "
+          f"quarantined={row['seg_quarantined']} "
+          f"recovered={row['seg_recovered']} "
+          f"poison rows caught={row['poison_detected']} "
+          f"(leaked ids: {len(leaked)})", flush=True)
+    emit([row], "health")
+    ok = (row["coverage_mean"] >= 0.95 and row["throughput_ratio"] >= 0.8
+          and row["no_poisoned_ids"] and row["recovered_all_segments"])
+    print(f"acceptance (>=0.95 coverage, >=0.8x clean throughput, zero "
+          f"poisoned ids, all segments re-admitted): "
+          f"{'PASS' if ok else 'FAIL'}")
+    return [row]
+
+
 if __name__ == "__main__":
     run()

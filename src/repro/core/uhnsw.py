@@ -132,6 +132,14 @@ class CandidateSet(NamedTuple):
     n_b_spill: jax.Array | float = 0.0   # (B,) or scalar zero
     n_cand_spill: jax.Array | float = 0.0  # (B,) spill-phase survivors in
                                            # the merged candidate list
+    # degraded-coverage serving (DESIGN.md §11). The sharded index's
+    # query-time NaN/inf guard masks any candidate whose gathered base
+    # distance is non-finite (it can never reach a top-k) and raises the
+    # per-row flag so the engine can attribute the poison to a segment.
+    poisoned: jax.Array | float = 0.0  # (B,) 1.0 where the guard tripped
+    coverage_frac: float = 1.0  # exact served fraction of the corpus
+                                # under the alive mask these candidates
+                                # were generated with (host-side float)
 
 
 class SearchStats(NamedTuple):
@@ -173,6 +181,16 @@ class SearchStats(NamedTuple):
         # byte traffic (1 byte/dim vs 4 on the f32 side): bytes ratio
         # vs the uncompressed path = n_f32_rows_frac + n_band_frac / 4.
         # 0.0 when no compressed band is in play.
+    # degraded-coverage serving (DESIGN.md §11): quarantined segments are
+    # masked out of the search, and every result says exactly how much of
+    # the corpus it covered. coverage_frac is exact — (alive frozen rows +
+    # delta rows) / total rows, computed host-side from the health tracker
+    # at candidate-generation time. Monolithic searches always report 1.0.
+    coverage_frac: float = 1.0
+    degraded: bool = False  # coverage_frac < 1.0
+    poisoned: jax.Array | float = 0.0  # (B,) 1.0 where the query-time
+        # NaN/inf guard masked non-finite gathered distances (the engine
+        # bisects this back to a segment and quarantines it)
 
     def phase_n_b(self):
         """(probe, spill) N_b split with the None default resolved."""
@@ -639,7 +657,9 @@ def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
     hops, n_dim_frac, n_f32_rows_frac, n_band_frac) — optionally followed
     by the four per-phase counters (n_b_probe, n_b_spill, n_p_probe,
     n_p_spill), which the sharded index appends (DESIGN.md §3); absent,
-    the whole sub-batch counts as probe.
+    the whole sub-batch counts as probe. A 14th element, the per-row
+    poisoned flag from the NaN/inf guard (DESIGN.md §11), is likewise
+    optional and defaults to all-clean.
     Returns (ids (B, k), dists (B, k), SearchStats) with per-row stats
     scattered back into request order; stats.base_p is the (B,) host-side
     base-metric array (the partition itself is host logic).
@@ -673,31 +693,33 @@ def two_way_mixed_search(Q, p, k: int, cutoff: float, search_base_vec):
         (s_ids, s_dists, s_np, s_it, s_nb, s_hops, s_frac, s_f32,
          s_band) = res[:9]
         if len(res) > 9:
-            nb_pr, nb_sp, np_pr, np_sp = res[9:]
+            nb_pr, nb_sp, np_pr, np_sp = res[9:13]
         else:  # phase-unaware index: everything is probe work
             nb_pr, nb_sp = s_nb, jnp.zeros_like(s_nb)
             np_pr, np_sp = s_np, jnp.zeros_like(s_np)
+        # NaN/inf-guard flag (DESIGN.md §11); absent = all-clean
+        s_pois = res[13] if len(res) > 13 else jnp.zeros_like(s_frac)
         sels.append(sel)
         parts.append((s_ids, s_dists, s_np, s_nb, s_hops, s_frac,
-                      s_f32, s_band, nb_pr, nb_sp, np_pr, np_sp))
+                      s_f32, s_band, nb_pr, nb_sp, np_pr, np_sp, s_pois))
         iters = jnp.maximum(iters, jnp.asarray(s_it, jnp.int32))
     if len(parts) == 1:  # homogeneous batch: already in request order
         (ids, dists, n_p, n_b, hops, frac, f32f, bandf,
-         nb_pr, nb_sp, np_pr, np_sp) = parts[0]
+         nb_pr, nb_sp, np_pr, np_sp, pois) = parts[0]
     else:
         order = np.concatenate(sels)
         inv = np.empty(b, np.int64)
         inv[order] = np.arange(b)
         inv = jnp.asarray(inv)
         (ids, dists, n_p, n_b, hops, frac, f32f, bandf,
-         nb_pr, nb_sp, np_pr, np_sp) = (
+         nb_pr, nb_sp, np_pr, np_sp, pois) = (
             jnp.concatenate(xs, axis=0)[inv] for xs in zip(*parts)
         )
     stats = SearchStats(
         n_b=n_b, n_p=n_p, iterations=iters, base_p=base, hops=hops,
         n_dim_frac=frac, n_b_probe=nb_pr, n_b_spill=nb_sp,
         n_p_probe=np_pr, n_p_spill=np_sp, n_f32_rows_frac=f32f,
-        n_band_frac=bandf,
+        n_band_frac=bandf, poisoned=pois,
     )
     return ids, dists, stats
 

@@ -6,12 +6,24 @@
             merge, a single verify_candidates pass (paper N_p preserved)
   delta   — mutable delta buffer for online add(): brute-force exact-Lp
             scan merged into graph results; compaction -> new frozen segment
+  health  — per-segment health state machine (DESIGN.md §11): failure-EWMA
+            driven HEALTHY/SUSPECT/QUARANTINED/RECOVERING transitions, the
+            alive mask behind degraded-coverage search
   persist — atomic CRC-checked snapshots + recovery (DESIGN.md §9):
-            recover(dir) = last durable snapshot + WAL replay, bit-identical
+            recover(dir) = last durable snapshot + WAL replay, bit-identical;
+            restore_segment re-materializes one quarantined segment
   wal     — fsync'd CRC-framed write-ahead log for delta-tier inserts
 """
 
 from repro.index.delta import DeltaBuffer  # noqa: F401
+from repro.index.health import (  # noqa: F401
+    HEALTHY,
+    QUARANTINED,
+    RECOVERING,
+    SUSPECT,
+    HealthPolicy,
+    SegmentHealthTracker,
+)
 from repro.index.persist import (  # noqa: F401
     DurableIndex,
     RecoveryError,
@@ -19,6 +31,7 @@ from repro.index.persist import (  # noqa: F401
     latest_durable_snapshot,
     load_snapshot,
     recover,
+    restore_segment,
     save_snapshot,
 )
 from repro.index.segment import SegmentedGraphs, build_segments, partition_dataset  # noqa: F401

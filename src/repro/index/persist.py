@@ -332,6 +332,60 @@ def load_snapshot(path, params: UHNSWParams | None = None) -> ShardedUHNSW:
     return idx
 
 
+def restore_segment(index, seg: int, directory) -> bool:
+    """Restore one quarantined segment's rows from the newest durable
+    snapshot (DESIGN.md §11) — the data-plane half of segment recovery.
+
+    Graph topology never goes bad in place (it is immutable after build);
+    what poison/corruption hits is the *row storage* — `_X_host`, the
+    device copy `X`, the stacked per-segment `segments.X`, and the
+    per-graph data arrays the next restack would read. This rewrites all
+    four from snapshot bytes that passed the manifest CRC re-verification
+    (`read_manifest` — a torn snapshot is never a restore source) and
+    drops the §10 band/scan caches, which quantized the poisoned rows.
+
+    The snapshot segment is matched by *global-id equality*, not by
+    position: compactions after the snapshot may have appended segments,
+    and a segment created after the newest snapshot has no restore source
+    at all. Returns True when `seg` was restored; False when there is no
+    durable snapshot or none of its segments matches (the caller leaves
+    the segment quarantined). Accepts a DurableIndex or a bare
+    ShardedUHNSW.
+
+    Re-admission stays with the caller: a restored segment must still
+    pass its canary probes (`ShardedUHNSW.canary_probe`) before the
+    health tracker returns it to serving.
+    """
+    index = getattr(index, "index", index)  # unwrap DurableIndex
+    snap = latest_durable_snapshot(directory)
+    if snap is None:
+        return False
+    manifest = read_manifest(snap)  # CRC re-verification (commit point)
+    npz = np.load(snap / manifest["arrays"]["file"])
+    live_ids = np.asarray(index.segments.global_ids[seg], dtype=np.int64)
+    for i in range(len(manifest["segments"])):
+        ids = np.asarray(npz[f"s{i:04d}.ids"], dtype=np.int64)
+        if not np.array_equal(ids, live_ids):
+            continue
+        rows = np.ascontiguousarray(npz["X"][ids], dtype=np.float32)
+        # copy-on-write (mirrors faults.poison_segment): never write into
+        # an _X_host that may alias the caller's dataset array
+        index._X_host = np.array(index._X_host, dtype=np.float32)
+        index._X_host[live_ids] = rows
+        index.X = jnp.asarray(index._X_host)
+        segs = index.segments
+        segs.X = segs.X.at[seg, : len(rows)].set(jnp.asarray(rows))
+        # the next compaction restacks from the per-graph data arrays
+        segs.graphs1[seg].data = rows
+        segs.graphs2[seg].data = rows
+        index._band = None        # quantized over the poisoned rows
+        index._scan_cache = None
+        if index._rt is not None:  # .at[].set dropped the placement
+            index.shard_over(index._rt)
+        return True
+    return False
+
+
 def recover(directory, params: UHNSWParams | None = None) -> ShardedUHNSW:
     """Newest durable snapshot + durable WAL prefix -> live index.
 

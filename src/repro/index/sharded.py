@@ -67,6 +67,7 @@ from repro.core.uhnsw import (
     verify_candidates,
 )
 from repro.index.delta import DeltaBuffer
+from repro.index.health import SegmentHealthTracker
 from repro.index.segment import SegmentedGraphs, build_segment_pair, build_segments
 
 
@@ -131,6 +132,29 @@ class ShardedParams:
         admissible = -(-t * probe // num_segments)  # ceil(t*probe/S)
         return max(1, min(max(k or 1, admissible), t))
 
+    def validate_for(self, num_segments: int, t: int) -> None:
+        """Instance-dependent bounds, checked where the index is built.
+
+        `__post_init__` can only see the params themselves; these two
+        constraints involve the index (segment count, candidate width) and
+        used to surface as shape errors deep inside
+        `segmented_knn_search`. ShardedUHNSW calls this at construction so
+        they fail immediately, with a fix attached. probe == num_segments
+        stays legal (the policy degenerates to independent).
+        """
+        if self.probe > num_segments:
+            raise ValueError(
+                f"ShardedParams.probe={self.probe} exceeds the index's "
+                f"{num_segments} segments — phase A cannot probe more "
+                f"segments than exist; lower probe to <= {num_segments} "
+                f"or build with more segments")
+        if self.thresh_rank is not None and self.thresh_rank > t:
+            raise ValueError(
+                f"ShardedParams.thresh_rank={self.thresh_rank} exceeds the "
+                f"candidate width t={t} — the running rank-r best only "
+                f"exists for r <= t; lower thresh_rank or raise "
+                f"UHNSWParams.t")
+
 
 @functools.partial(
     jax.jit, static_argnames=("ef", "t", "max_hops", "expand_width")
@@ -145,6 +169,7 @@ def segmented_knn_search(
     max_hops: int = 4096,
     expand_width: int = 1,
     thresh: jax.Array | None = None,
+    alive: jax.Array | None = None,
 ):
     """Vmapped per-segment base-metric search + one-sort global merge.
 
@@ -155,12 +180,34 @@ def segmented_knn_search(
     terminate as soon as their sub-threshold region is exhausted. None
     compiles the unmodified exhaustive program.
 
+    `alive` (optional (S,) bool, *traced* — one compiled program serves
+    every mask) implements degraded-coverage search (DESIGN.md §11): dead
+    segments still run inside the vmap (the stacked shape is fixed) but
+    their outputs are masked to the padding encoding (-1 ids, inf dists,
+    zero counters) before the merge, which makes the merged result
+    bitwise identical to a search over an index holding only the alive
+    segments. None compiles the unmasked program.
+
+    Every gathered per-segment distance also passes a NaN/inf guard: a
+    candidate with a real id but a non-finite base distance (poisoned
+    rows, a corrupt gather) is masked to padding — it can never reach a
+    top-k — and raises that query's `poisoned` flag so the serving engine
+    can bisect the poison back to a segment. Because a beam never
+    *admits* a NaN distance (every comparison against it is false), a
+    fully poisoned segment would otherwise return only sentinels and slip
+    past a final-list check — so the guard additionally recomputes each
+    query's base distance to the segment's entry-point row (one O(B*d)
+    evaluation per segment, the row every beam must gather first) and
+    flags non-finite entry distances too.
+
     Returns (gids (B, t) int32 global ids (-1 past the end of real data),
-    dists (B, t) base-metric root-free distances, n_b (B,), hops (B,)).
+    dists (B, t) base-metric root-free distances, n_b (B,), hops (B,),
+    poisoned (B,) bool).
     """
     n_pad = arrays.n
+    base_p = arrays.metric_p
 
-    def per_segment(arr, x, ni):
+    def per_segment(arr, x, ni, al):
         ids, dists, nb, hops = knn_search(
             arr, x, Q, ef=ef, t=t, max_hops=max_hops,
             expand_width=expand_width, thresh=thresh,
@@ -168,14 +215,38 @@ def segmented_knn_search(
         valid = ids < n_pad
         g = jnp.where(valid, ni[jnp.clip(ids, 0, n_pad - 1)], -1)
         d = jnp.where(valid & (g >= 0), dists, jnp.inf)
-        return g, d, nb, hops
+        # NaN/inf guard: non-finite distance on a real id -> padding
+        bad = (g >= 0) & ~jnp.isfinite(d)
+        pois = bad.any(axis=1)
+        g = jnp.where(bad, -1, g)
+        d = jnp.where(bad, jnp.inf, d)
+        # entry-row probe: catches a fully poisoned segment whose beam
+        # admitted nothing (docstring) — base_p is 1 or 2, so the power
+        # sum needs no transcendentals
+        diff = jnp.abs(Q - x[jnp.clip(arr.entry, 0, n_pad - 1)][None, :])
+        entry_d = (diff if base_p == 1.0 else diff * diff).sum(axis=1)
+        pois = pois | ~jnp.isfinite(entry_d)
+        if al is not None:  # degraded mask: dead segment -> all padding
+            g = jnp.where(al, g, -1)
+            d = jnp.where(al, d, jnp.inf)
+            nb = jnp.where(al, nb, jnp.zeros_like(nb))
+            hops = jnp.where(al, hops, jnp.zeros_like(hops))
+            pois = pois & al
+        return g, d, nb, hops, pois
 
-    g, d, nb, hops = jax.vmap(per_segment)(arrays, X, node_ids)
+    if alive is None:
+        g, d, nb, hops, pois = jax.vmap(
+            lambda arr, x, ni: per_segment(arr, x, ni, None)
+        )(arrays, X, node_ids)
+    else:
+        g, d, nb, hops, pois = jax.vmap(per_segment)(
+            arrays, X, node_ids, alive)
     b = Q.shape[0]
     g = jnp.moveaxis(g, 0, 1).reshape(b, -1)  # (B, S*t)
     d = jnp.moveaxis(d, 0, 1).reshape(b, -1)
     sd, si = jax.lax.sort((d, g), num_keys=1)
-    return si[:, :t], sd[:, :t], nb.sum(axis=0), hops.sum(axis=0)
+    return (si[:, :t], sd[:, :t], nb.sum(axis=0), hops.sum(axis=0),
+            pois.any(axis=0))
 
 
 @functools.partial(jax.jit, static_argnames=("t",))
@@ -233,9 +304,15 @@ class ShardedUHNSW:
         self.segments = segments
         self.params = params or UHNSWParams()
         self.sharded_params = sharded_params or ShardedParams()
-        # per-(base graph, probe count) device sub-stacks for the phase
-        # split; invalidated whenever the segment set restacks (compaction)
-        # or placement changes (shard_over)
+        self.sharded_params.validate_for(segments.num_segments,
+                                         self.params.t)
+        # per-segment failure state machine (DESIGN.md §11): quarantined
+        # segments drop out of `_alive_segments()` and every search
+        # reports the exact coverage it served at
+        self.health = SegmentHealthTracker(segments.num_segments)
+        # per-(base graph, probe count, alive set) device sub-stacks for
+        # the phase split; invalidated whenever the segment set restacks
+        # (compaction) or placement changes (shard_over)
         self._phase_cache: dict = {}
         # _X_host holds only *frozen* rows (segment members); delta-resident
         # vectors live in the DeltaBuffer until compaction appends them here
@@ -393,8 +470,25 @@ class ShardedUHNSW:
             return self.search_stage_finish(Q, cands, p, k)
         return self._search_mixed(Q, p, k)
 
+    def _alive_segments(self) -> list[int]:
+        """Serving segment set from the health tracker (DESIGN.md §11)."""
+        return self.health.alive()
+
+    def coverage_frac(self, alive: list[int] | None = None) -> float:
+        """Exact served fraction of the corpus for an alive set: alive
+        frozen rows plus the (always-served) delta tier, over all rows."""
+        sizes = [g.n for g in self.segments.graphs1]
+        if alive is None:
+            alive = self._alive_segments()
+        total = sum(sizes) + len(self.delta)
+        if total <= 0:
+            return 1.0
+        return (sum(sizes[i] for i in alive) + len(self.delta)) / total
+
     def search_stage_candidates(self, Q, base_p: float,
-                                k: int | None = None) -> CandidateSet:
+                                k: int | None = None,
+                                alive: list[int] | None = None,
+                                ) -> CandidateSet:
         """Stage 1 of 2: segmented base-metric candidate generation.
 
         Same contract as `UHNSW.search_stage_candidates` (DESIGN.md §6):
@@ -404,16 +498,25 @@ class ShardedUHNSW:
         engine can overlap wave N+1's search with wave N's verification.
         `k` (the caller's final top-k, when known) tightens the derived
         threshold rank; None falls back to the admissible minimum.
+
+        `alive` restricts the search to a segment subset (DESIGN.md §11);
+        None serves the health tracker's current alive set. The returned
+        CandidateSet carries the exact `coverage_frac` for that set and
+        the per-row `poisoned` flag from the NaN/inf guard.
         """
         Q = jnp.asarray(Q, dtype=jnp.float32)
         seg = self.segments
         arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
-        (cand_ids, cand_dists, n_b, hops,
-         n_b_probe, n_b_spill, n_cand_spill) = self._segment_candidates(
-            arrays, Q, k=k)
+        alive_list = (self._alive_segments() if alive is None
+                      else sorted(int(i) for i in alive))
+        (cand_ids, cand_dists, n_b, hops, n_b_probe, n_b_spill,
+         n_cand_spill, poisoned) = self._segment_candidates(
+            arrays, Q, k=k, alive=alive_list)
         return CandidateSet(ids=cand_ids, base_dists=cand_dists, n_b=n_b,
                             hops=hops, base_p=base_p, n_b_probe=n_b_probe,
-                            n_b_spill=n_b_spill, n_cand_spill=n_cand_spill)
+                            n_b_spill=n_b_spill, n_cand_spill=n_cand_spill,
+                            poisoned=poisoned,
+                            coverage_frac=self.coverage_frac(alive_list))
 
     def search_stage_finish(self, Q, cands: CandidateSet, p, k: int):
         """Stage 2 of 2: verification (or base-metric skip) + delta merge.
@@ -453,7 +556,8 @@ class ShardedUHNSW:
             phases = self._phase_split(cands, n_p)
             return self._merge_delta(Q, p, k, ids, dists, n_p, iters, n_b,
                                      hops, base_p, frac, f32f, bandf,
-                                     phases)
+                                     phases, coverage=cands.coverage_frac,
+                                     poisoned=cands.poisoned)
         # vector p over one homogeneous base: the traced-p program + the
         # per-row base-metric skip mask, exactly as _search_mixed runs it
         ids, dists, n_p, iters, frac, f32f, bandf = verify_candidates(
@@ -469,7 +573,9 @@ class ShardedUHNSW:
         p_arr = np.broadcast_to(np.asarray(p, np.float32).reshape(-1),
                                 (int(Q.shape[0]),))
         return self._merge_delta(Q, p_arr, k, ids, dists, n_p, iters, n_b,
-                                 hops, base_p, frac, f32f, bandf, phases)
+                                 hops, base_p, frac, f32f, bandf, phases,
+                                 coverage=cands.coverage_frac,
+                                 poisoned=cands.poisoned)
 
     def _phase_split(self, cands: CandidateSet, n_p):
         """Per-phase (probe, spill) N_b/N_p attribution (DESIGN.md §3).
@@ -497,21 +603,29 @@ class ShardedUHNSW:
         sizes = [g.n for g in self.segments.graphs1]
         return sorted(range(len(sizes)), key=lambda i: (-sizes[i], i))
 
-    def _phase_stacks(self, base_p: float, probe: int):
+    def _phase_stacks(self, base_p: float, probe: int,
+                      alive_key: tuple | None = None):
         """Cached (probe, spill) device sub-stacks of the segment axis.
 
         Slicing the stacked pytrees is a handful of gathers; caching them
-        per (base graph, probe count) keeps the steady-state query path
-        free of per-call restacking. The cache clears on compaction and
-        re-placement (`shard_over`).
+        per (base graph, probe count, alive set) keeps the steady-state
+        query path free of per-call restacking. `alive_key` (a sorted
+        tuple of alive segment indices; None = all alive) filters the
+        probe order for degraded serving — dead segments are physically
+        absent from the sub-stacks, so the phase searches match an index
+        built from only the alive segments (DESIGN.md §11). The cache
+        clears on compaction and re-placement (`shard_over`).
         """
-        key = ("split", base_p, probe)
+        key = ("split", base_p, probe, alive_key)
         hit = self._phase_cache.get(key)
         if hit is not None:
             return hit
         seg = self.segments
         arrays = seg.arrays1 if base_p == 1.0 else seg.arrays2
         order = self._probe_order()
+        if alive_key is not None:
+            keep = set(alive_key)
+            order = [i for i in order if i in keep]
         sel_a = np.asarray(order[:probe])
         sel_b = np.asarray(order[probe:])
 
@@ -536,37 +650,63 @@ class ShardedUHNSW:
             self._phase_cache[key] = hit
         return hit
 
-    def _segment_candidates(self, arrays, Q, k: int | None = None):
+    def _segment_candidates(self, arrays, Q, k: int | None = None,
+                            alive: list[int] | None = None):
         """Policy-dispatched cross-segment candidate generation.
 
         Returns (gids (B, t), dists (B, t), n_b, hops, n_b_probe,
-        n_b_spill, n_cand_spill) — the last three feed the per-phase
-        stats split (DESIGN.md §3). Threshold-free work is "probe",
-        work under an inherited bound is "spill".
+        n_b_spill, n_cand_spill, poisoned) — the middle three feed the
+        per-phase stats split (DESIGN.md §3); threshold-free work is
+        "probe", work under an inherited bound is "spill". `poisoned` is
+        the per-row NaN/inf-guard flag (DESIGN.md §11).
+
+        `alive` (sorted segment indices; None = all) restricts the search
+        to a subset: every derived quantity — candidate width t, the
+        threshold rank, the probe order and count — is computed over the
+        subset exactly as an index built from only those segments would
+        compute it, which is what makes degraded results bitwise equal to
+        the healthy-subset index (the §11 parity invariant).
         """
         prm = self.params
         sp = self.sharded_params
-        n_frozen = sum(g.n for g in self.segments.graphs1)
+        s_total = self.num_segments
+        alive = list(range(s_total)) if alive is None else alive
+        if not alive:
+            raise RuntimeError(
+                "no alive segments to search — every frozen segment is "
+                "quarantined; recover from a snapshot (DESIGN.md §11) or "
+                "rebuild the index")
+        all_alive = len(alive) == s_total
+        sizes = [g.n for g in self.segments.graphs1]
+        n_frozen = sum(sizes[i] for i in alive)
         t = min(prm.t, n_frozen)
         ef = max(prm.ef or 2 * prm.t, t)
         # degenerate tiny beams can't host the full W; clamp, don't fail
         width = min(prm.expand_width, ef)
-        s = self.num_segments
+        s = len(alive)
         probe = max(1, min(sp.probe, s))
         single = s == 1 or (sp.policy == "two_phase" and probe >= s)
         if sp.policy == "independent" or single:
-            gids, dists, n_b, hops = segmented_knn_search(
+            if all_alive:
+                mask = None
+            else:  # traced mask: one compiled program serves any subset
+                m = np.zeros(s_total, dtype=bool)
+                m[alive] = True
+                mask = jnp.asarray(m)
+            gids, dists, n_b, hops, pois = segmented_knn_search(
                 arrays, self.segments.X, self.segments.node_ids, Q,
                 ef=ef, t=t, max_hops=prm.max_hops, expand_width=width,
+                alive=mask,
             )
             zero = jnp.zeros_like(n_b)
-            return gids, dists, n_b, hops, n_b, zero, zero
+            return gids, dists, n_b, hops, n_b, zero, zero, pois
         rank = sp.resolve_thresh_rank(t, s, k)
         base_p = arrays.metric_p
+        alive_key = None if all_alive else tuple(alive)
         if sp.policy == "two_phase":
             (arr_a, x_a, ni_a), (arr_b, x_b, ni_b) = self._phase_stacks(
-                base_p, probe)
-            g_a, d_a, nb_a, hops_a = segmented_knn_search(
+                base_p, probe, alive_key)
+            g_a, d_a, nb_a, hops_a, pois_a = segmented_knn_search(
                 arr_a, x_a, ni_a, Q, ef=ef, t=t, max_hops=prm.max_hops,
                 expand_width=width,
             )
@@ -581,28 +721,29 @@ class ShardedUHNSW:
             # on ef=t builds (ef*ef_shrink < t there).
             ef_b = max(k or 1, rank, int(round(ef * sp.ef_shrink)))
             t_b = min(t, ef_b)
-            g_b, d_b, nb_b, hops_b = segmented_knn_search(
+            g_b, d_b, nb_b, hops_b, pois_b = segmented_knn_search(
                 arr_b, x_b, ni_b, Q, ef=ef_b, t=t_b, max_hops=prm.max_hops,
                 expand_width=min(width, ef_b), thresh=thresh,
             )
             gids, dists, flags = merge_phase_lists(g_a, d_a, g_b, d_b, t)
             n_cand_spill = ((flags == 1) & (gids >= 0)).sum(axis=1)
             return (gids, dists, nb_a + nb_b, hops_a + hops_b,
-                    nb_a, nb_b, n_cand_spill.astype(jnp.int32))
+                    nb_a, nb_b, n_cand_spill.astype(jnp.int32),
+                    pois_a | pois_b)
         # round_robin: single-phase cascade — every turn inherits the
         # running merged rank-r best of all earlier turns as its bound
-        order = self._probe_order()
-        gids = dists = flags = None
+        order = [i for i in self._probe_order() if i in set(alive)]
+        gids = dists = flags = pois = None
         nb_probe = nb_spill = hops = None
         for turn, i in enumerate(order):
             arr_i, x_i, ni_i = self._segment_stack(base_p, i)
             thresh = dists[:, rank - 1] if turn else None
-            g_i, d_i, nb_i, hops_i = segmented_knn_search(
+            g_i, d_i, nb_i, hops_i, pois_i = segmented_knn_search(
                 arr_i, x_i, ni_i, Q, ef=ef, t=t, max_hops=prm.max_hops,
                 expand_width=width, thresh=thresh,
             )
             if turn == 0:
-                gids, dists = g_i, d_i
+                gids, dists, pois = g_i, d_i, pois_i
                 flags = jnp.zeros_like(g_i)
                 nb_probe, nb_spill, hops = nb_i, jnp.zeros_like(nb_i), hops_i
             else:
@@ -610,9 +751,10 @@ class ShardedUHNSW:
                     gids, dists, flags, g_i, d_i, t)
                 nb_spill = nb_spill + nb_i
                 hops = hops + hops_i
+                pois = pois | pois_i
         n_cand_spill = ((flags == 1) & (gids >= 0)).sum(axis=1)
         return (gids, dists, nb_probe + nb_spill, hops,
-                nb_probe, nb_spill, n_cand_spill.astype(jnp.int32))
+                nb_probe, nb_spill, n_cand_spill.astype(jnp.int32), pois)
 
     def _graph_search_base_vec(self, Q, p_vec, k: int, base_p: float):
         """One homogeneous-base sub-batch with per-row p (traced-p program),
@@ -633,7 +775,7 @@ class ShardedUHNSW:
             n_dim_frac=frac, n_f32_frac=f32f, n_band_frac=bandf)
         nb_pr, nb_sp, np_pr, np_sp = self._phase_split(cands, n_p)
         return (ids, dists, n_p, iters, cands.n_b, cands.hops, frac,
-                f32f, bandf, nb_pr, nb_sp, np_pr, np_sp)
+                f32f, bandf, nb_pr, nb_sp, np_pr, np_sp, cands.poisoned)
 
     def _search_mixed(self, Q, p, k: int):
         """Mixed-p batch: two-way G1/G2 partition, then one delta merge."""
@@ -649,11 +791,12 @@ class ShardedUHNSW:
                                  stats.iterations, stats.n_b, stats.hops,
                                  stats.base_p, stats.n_dim_frac,
                                  stats.n_f32_rows_frac, stats.n_band_frac,
-                                 phases)
+                                 phases, coverage=self.coverage_frac(),
+                                 poisoned=stats.poisoned)
 
     def _merge_delta(self, Q, p, k, ids, dists, n_p, iters, n_b, hops,
                      base_p, n_dim_frac, n_f32_frac, n_band_frac,
-                     phases=None):
+                     phases=None, coverage: float = 1.0, poisoned=0.0):
         """Sort-merge exact delta-tier hits into the verified top-k.
 
         With abandonment on, the delta scan inherits the verified top-k's
@@ -702,12 +845,42 @@ class ShardedUHNSW:
                             n_b_probe=nb_pr, n_b_spill=nb_sp,
                             n_p_probe=np_pr, n_p_spill=np_sp,
                             n_f32_rows_frac=n_f32_frac,
-                            n_band_frac=n_band_frac)
+                            n_band_frac=n_band_frac,
+                            coverage_frac=float(coverage),
+                            degraded=bool(coverage < 1.0),
+                            poisoned=poisoned)
         return ids, dists, stats
 
     def modeled_query_cost(self, stats: SearchStats, p, d: int) -> dict:
         """Paper Eq. 1 cost split — the shared core/uhnsw helper."""
         return modeled_query_cost(stats, p, d)
+
+    # -- segment health (DESIGN.md §11) --------------------------------------
+
+    def canary_probe(self, seg: int, n_probes: int = 2,
+                     seed: int = 0) -> bool:
+        """One canary health check of segment `seg`: self-query a few of
+        its own members against *only* that segment. A healthy segment
+        must return each member as its own top-1 at a finite distance
+        with the NaN/inf guard clean — restored-but-corrupt rows, a
+        broken graph, or lingering poison all fail the probe. Records the
+        outcome with the health tracker (re-admission requires
+        `HealthPolicy.probe_successes` consecutive passes) and returns it.
+        """
+        ids = np.asarray(self.segments.global_ids[seg])
+        rng = np.random.default_rng(seed * 1009 + seg)
+        pick = rng.choice(len(ids), size=min(n_probes, len(ids)),
+                          replace=False)
+        gids = ids[np.sort(pick)]
+        q = self._X_host[gids]
+        cands = self.search_stage_candidates(q, 2.0, k=1, alive=[seg])
+        top = np.asarray(cands.ids[:, 0])
+        top_d = np.asarray(cands.base_dists[:, 0])
+        pois = np.asarray(cands.poisoned)
+        ok = bool(np.array_equal(top, gids) and np.all(np.isfinite(top_d))
+                  and not pois.any())
+        self.health.record_probe(seg, ok)
+        return ok
 
     # -- streaming inserts --------------------------------------------------
 
@@ -750,6 +923,9 @@ class ShardedUHNSW:
         g1, g2 = build_segment_pair(vecs, m=m, seed=int(ids[0]) + 1,
                                     method=self._build_method)
         self.segments.append(g1, g2, ids)
+        # the new segment starts HEALTHY; existing quarantines survive the
+        # compaction (the rows they cover are still suspect)
+        self.health.resize(self.num_segments)
         self._phase_cache.clear()  # restack invalidates cached sub-stacks
         self.X = jnp.asarray(self._X_host)
         # the frozen corpus grew: quantize the new rows into a fresh band

@@ -56,10 +56,17 @@ def serve_retrieval(args) -> int:
     from repro.retrieval.engine import FaultInjector
     from repro.retrieval.service import QueryRequest, UniversalVectorService
 
-    # chaos rehearsal (DESIGN.md §9): a seeded injector at the engine's
-    # device-call boundary; 0.0 leaves the happy path untouched
-    injector = FaultInjector(rate=args.fault_rate, seed=args.fault_seed) \
-        if args.fault_rate > 0 else None
+    # chaos rehearsal (DESIGN.md §9, §11): a seeded injector at the
+    # engine's device-call boundary; 0.0 leaves the happy path untouched.
+    # --fault-sites segment adds the per-segment sites (opt-in — the
+    # classic three-site schedules never shift), which exercises the
+    # health tracker's EWMA quarantine path under the coverage floor.
+    injector = None
+    if args.fault_rate > 0:
+        sites = tuple(args.fault_sites.split(",")) if args.fault_sites \
+            else None
+        injector = FaultInjector(rate=args.fault_rate, seed=args.fault_seed,
+                                 sites=sites)
     ds = make_dataset("deep", n=args.n, n_queries=128, seed=args.seed)
     # --compressed: two-band verification (DESIGN.md §10) — candidates are
     # screened against the int8 band and only survivors gather f32 rows;
@@ -75,14 +82,18 @@ def serve_retrieval(args) -> int:
                   f"{len(index.delta)} delta-resident inserts")
         else:
             index = DurableIndex.create(
-                ShardedUHNSW.build(ds.data, m=16, params=params),
+                ShardedUHNSW.build(ds.data, num_segments=args.segments,
+                                   m=16, params=params),
                 args.state_dir)
             print(f"created durable index at {args.state_dir}: n={index.n}")
         service = UniversalVectorService(index=index,
-                                         fault_injector=injector)
+                                         fault_injector=injector,
+                                         min_coverage=args.min_coverage)
     else:
         service = UniversalVectorService.build(ds.data, params, m=16,
-                                               fault_injector=injector)
+                                               num_segments=args.segments,
+                                               fault_injector=injector,
+                                               min_coverage=args.min_coverage)
     rng = np.random.default_rng(args.seed)
     reqs = [
         QueryRequest(
@@ -134,6 +145,25 @@ def serve_retrieval(args) -> int:
                  f"injected={injector.injected})" if injector else ""))
         for rid, err in sorted(failures.items())[:5]:
             print(f"    request {rid} FAILED: {err}")
+    # degraded serving (DESIGN.md §11): achieved coverage, what the NaN
+    # guard caught, and the quarantine/recovery/probe tallies — printed
+    # whenever the engine ran degraded or the operator set a floor
+    hl = lat.get("health") or {}
+    tracker = hl.get("tracker")
+    if hl and (args.min_coverage > 0 or hl.get("poison_detected")
+               or hl.get("seg_quarantined") or hl.get("min_coverage_failed")
+               or (tracker and tracker.get("quarantined"))):
+        print(f"  health: coverage_mean={hl['coverage_mean']:.4f} "
+              f"(floor {args.min_coverage}) "
+              f"poison_detected={hl['poison_detected']} "
+              f"quarantined={hl['seg_quarantined']} "
+              f"recovered={hl['seg_recovered']} "
+              f"min_coverage_failed={hl['min_coverage_failed']}")
+        if tracker:
+            print(f"    tracker: by_state={tracker['by_state']} "
+                  f"probes={tracker['probes']} "
+                  f"failures={tracker['failures']} "
+                  f"generation={tracker['generation']}")
     qm, cm = lat.get("queue_ms") or {}, lat.get("compute_ms") or {}
     if qm and cm:
         warm = lat.get("warm") or {}
@@ -169,11 +199,23 @@ def main(argv=None) -> int:
                     help="serve the universal-Lp vector search tier instead")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--n", type=int, default=5000)
+    ap.add_argument("--segments", type=int, default=4,
+                    help="frozen segments in the sharded index (the unit "
+                         "of quarantine under --fault-sites segment)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fault-rate", type=float, default=0.0,
                     help="inject transient device-call faults at this "
                          "rate (seeded, deterministic; DESIGN.md §9)")
     ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--fault-sites", default=None,
+                    help="comma-separated injector site filter, e.g. "
+                         "'search' or 'segment' (the per-segment wildcard; "
+                         "DESIGN.md §11). Default: the three classic sites")
+    ap.add_argument("--min-coverage", type=float, default=0.0,
+                    help="degraded-serving floor (DESIGN.md §11): waves "
+                         "collected below this alive-coverage fraction "
+                         "retry after segment recovery or FAIL their "
+                         "requests with the achieved coverage attached")
     ap.add_argument("--state-dir", default=None,
                     help="durable index state: recover from this directory "
                          "if it holds a snapshot, else snapshot the fresh "

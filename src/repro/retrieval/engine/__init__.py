@@ -47,10 +47,14 @@ from types import SimpleNamespace
 import numpy as np
 
 from repro.core.metrics import base_metric_for
+from repro.index.health import QUARANTINED
 from repro.retrieval.engine.faults import (
+    SEGMENT_WILDCARD,
     FaultInjector,
     InjectedFault,
+    InjectedSegmentFault,
     InjectedTimeout,
+    segment_site,
 )
 from repro.retrieval.engine.pipeline import TwoStagePipeline, Wave, make_waves
 from repro.retrieval.engine.request import FAILED as STAGE_FAILED
@@ -80,7 +84,9 @@ __all__ = [
     "ServingEngine", "EnginePolicy", "EngineRequest", "BucketScheduler",
     "TwoStagePipeline", "Wave", "Flush", "ManualClock", "bucket_ladder",
     "chunk_plan", "make_waves", "default_stats",
-    "FaultInjector", "InjectedFault", "InjectedTimeout", "EngineClosed",
+    "FaultInjector", "InjectedFault", "InjectedTimeout",
+    "InjectedSegmentFault", "segment_site", "EngineClosed",
+    "PoisonedResultError", "CoverageError",
     "FULL", "DEADLINE", "DRAIN", "SHED", "DEGRADE",
     "LIVE", "DRAINING", "ENGINE_FAILED",
 ]
@@ -88,6 +94,20 @@ __all__ = [
 
 class EngineClosed(RuntimeError):
     """Admission attempted on an engine that is draining or failed."""
+
+
+class PoisonedResultError(RuntimeError):
+    """A wave's collected results tripped the NaN/inf poison guard. The
+    offending segment has already been located (O(log S) bisection) and
+    quarantined by the time this raises — the normal retry machinery then
+    re-runs the wave at reduced coverage, so no poisoned id ever reaches
+    a results dict."""
+
+
+class CoverageError(RuntimeError):
+    """A wave was collected below `EnginePolicy.min_coverage` but a
+    background recovery re-admitted at least one segment — raised to send
+    the wave back through retry at the improved coverage."""
 
 
 def default_stats() -> dict:
@@ -120,6 +140,12 @@ def default_stats() -> dict:
         "retries": 0,                # wave re-executions
         "quarantine_splits": 0,      # bisections isolating poison requests
         "failed": 0,                 # requests in terminal FAILED state
+        # degraded serving (DESIGN.md §11)
+        "coverage_w": 0.0,           # sum(coverage_frac * real rows) served
+        "poison_detected": 0,        # result rows caught by the NaN guard
+        "seg_quarantined": 0,        # segments quarantined by the engine
+        "seg_recovered": 0,          # segments restored + re-admitted
+        "min_coverage_failed": 0,    # requests FAILED for low coverage
         # attribution: one bucket per base graph and one per distinct
         # requested p, each with its own Eq. 1 split
         "per_base": {
@@ -238,6 +264,7 @@ class ServingEngine:
         ready to overlap with, and holding a dispatched wave for a
         *future* arrival would charge that wave the inter-arrival gap —
         exactly what a latency-first engine must not do."""
+        self._maintain()
         flushes = self.sched.poll(now)
         while flushes:
             self._run(flushes)
@@ -247,6 +274,7 @@ class ServingEngine:
     def drain(self, now: float | None = None) -> dict[int, tuple]:
         """Flush everything queued, finish the pipeline, and hand back
         all results accumulated since the last drain."""
+        self._maintain()
         self._run(self.sched.poll(now))          # due flushes keep their
         self._run(self.sched.flush_all(now))     # full/deadline reasons
         self._settle()
@@ -359,6 +387,112 @@ class ServingEngine:
         if self.fault_injector is not None:
             self.fault_injector.check(site)
 
+    def _inject_segments(self) -> None:
+        """Draw the per-segment fault sites for every currently-alive
+        segment, in segment order. Strictly opt-in (faults.py contract):
+        a no-op unless an injector is configured with a `sites` filter
+        that names segment sites AND the index carries a health tracker —
+        so classic three-site chaos schedules never shift."""
+        inj = self.fault_injector
+        if inj is None or inj.sites is None:
+            return
+        if not any(s == SEGMENT_WILDCARD or s.startswith("segment:")
+                   for s in inj.sites):
+            return
+        health = getattr(self.index, "health", None)
+        if health is None:
+            return
+        for seg in health.alive():
+            inj.check(segment_site(seg))
+
+    # rows per localization probe: the poisoned rows' queries tiled to one
+    # fixed small batch shape, so every bisection probe compiles once and
+    # costs a fraction of a full wave re-run
+    PROBE_BATCH = 8
+
+    def _locate_poisoned_segment(self, wave: Wave,
+                                 pois: np.ndarray) -> int | None:
+        """Attribute a poisoned wave to ONE alive segment by bisection:
+        re-run stage A over half the alive set and read its poison flags,
+        keeping whichever half still trips the guard — at most
+        ceil(log2 S) device probes per event (the detection bound the
+        chaos tests pin). Returns None without any probing when the wave
+        was dispatched under a *stale* serving-set generation (its
+        poisoned segment is already quarantined — the one-wave lookahead
+        makes this ordinary): there is nothing new to quarantine, the
+        retry alone fixes it, and bisecting the now-clean set would
+        convict an innocent segment. (If a concurrent *readmission* bumped
+        the generation instead, the retry re-detects under the current
+        generation and bisection proceeds then.) When the generation
+        matches, the wave itself is the full-set probe — it searched
+        exactly the current alive set and tripped the guard — so
+        bisection starts immediately.
+
+        Probes re-use the queries of the rows that tripped the guard
+        (`pois`), tiled to the fixed PROBE_BATCH shape: those rows
+        provably surface the poison, and a subset search only *lowers*
+        the competition a non-finite candidate must beat to be flagged."""
+        health = self.index.health
+        if wave.health_gen != health.generation:
+            return None
+        alive = sorted(health.alive())
+        if not alive:
+            return None
+        bad = np.flatnonzero(np.asarray(pois))
+        reps = int(np.ceil(self.PROBE_BATCH / len(bad)))
+        q = np.tile(wave.q[bad], (reps, 1))[:self.PROBE_BATCH]
+
+        def poisoned(subset: list[int]) -> bool:
+            cands = self.index.search_stage_candidates(
+                q, wave.base, k=wave.k, alive=subset)
+            return bool(np.asarray(cands.poisoned).any())
+
+        while len(alive) > 1:
+            left = alive[:len(alive) // 2]
+            # the full set is known-poisoned, so a clean left half puts
+            # the poison in the right half — no confirmation probe needed
+            alive = left if poisoned(left) else alive[len(alive) // 2:]
+        return alive[0]
+
+    def _maintain(self) -> int:
+        """Background recovery of quarantined segments (DESIGN.md §11):
+        for each quarantined segment, re-materialize its rows from the
+        latest *durable* snapshot (checksums re-verified by the manifest
+        read inside restore_segment), then gate re-admission behind the
+        health policy's canary-probe streak — a segment that cannot be
+        restored or fails a probe goes straight back to quarantine.
+        Returns the number of segments re-admitted. No-op (returns 0)
+        for monolithic indexes and for indexes without a durable home
+        (no snapshot to restore from)."""
+        health = getattr(self.index, "health", None)
+        if health is None:
+            return 0
+        quarantined = health.quarantined()
+        if not quarantined:
+            return 0
+        directory = getattr(self.index, "directory", None)
+        if directory is None:
+            return 0
+        from repro.index.persist import restore_segment
+        st = self.stats
+        recovered = 0
+        for seg in quarantined:
+            if not restore_segment(self.index, seg, directory):
+                continue                    # no durable copy of this segment
+            health.begin_recovery(seg)
+            ok = True
+            for i in range(health.policy.probe_successes):
+                ok = self.index.canary_probe(seg, seed=i)
+                if not ok:
+                    break
+            if ok and health.probe_passed(seg):
+                health.readmit(seg)
+                st["seg_recovered"] += 1
+                recovered += 1
+            else:
+                health.quarantine(seg)      # canary failed: stay out
+        return recovered
+
     def _advance(self, wave: Wave, work: deque[Wave]) -> None:
         """One pipeline step: dispatch A(N), collect B(N-1), dispatch
         B(N). The collect sits *between* the dispatches so wave N's base
@@ -373,7 +507,15 @@ class ServingEngine:
         """
         prev, self._inflight = self._inflight, None
         try:
+            self._inject_segments()
             self._inject("search")
+            health = getattr(self.index, "health", None)
+            # pin the serving-set generation the wave searches under: a
+            # poison flag collected from a *stale* generation needs no
+            # bisection (its culprit is already quarantined — retry fixes
+            # it), and from the *current* one the wave itself is the
+            # full-set probe
+            wave.health_gen = None if health is None else health.generation
             self.pipeline.dispatch_search(wave)
         except Exception as e:
             self._inflight = prev          # predecessor is untouched
@@ -421,6 +563,17 @@ class ServingEngine:
         """
         st = self.stats
         st["faults"] += 1
+        # segment-attributable fault: feed the health tracker's failure
+        # EWMA before retrying — enough consecutive hits quarantine the
+        # segment, and the retried wave then runs with it masked out
+        # (reduced coverage) instead of failing requests (DESIGN.md §11).
+        health = getattr(self.index, "health", None)
+        if isinstance(exc, InjectedSegmentFault) and health is not None \
+                and 0 <= exc.segment < health.num_segments:
+            was = health.state(exc.segment)
+            health.record_failure(exc.segment)
+            if was != QUARANTINED and health.state(exc.segment) == QUARANTINED:
+                st["seg_quarantined"] += 1
         wave.cands = None    # drop device buffers; re-execute from stage A
         wave.result = None
         if wave.attempt < self.policy.max_retries:
@@ -462,7 +615,48 @@ class ServingEngine:
     # -- collection + stats --------------------------------------------------
 
     def _collect(self, wave: Wave) -> None:
-        ids, dists, n_b, n_p, frac, f32, phases = self.pipeline.collect(wave)
+        ids, dists, n_b, n_p, frac, f32, phases, cov, pois = \
+            self.pipeline.collect(wave)
+        st = self.stats
+        health = getattr(self.index, "health", None)
+        if pois.any():
+            # NaN/inf guard tripped (DESIGN.md §11): locate the poisoned
+            # segment, quarantine it, and raise into the retry machinery —
+            # the re-run serves at reduced coverage and nothing from this
+            # collection is ever recorded as a result.
+            st["poison_detected"] += int(pois.sum())
+            seg = None
+            if health is not None:
+                seg = self._locate_poisoned_segment(wave, pois)
+                if seg is not None:
+                    was = health.state(seg)
+                    health.quarantine(seg)
+                    if was != QUARANTINED:
+                        st["seg_quarantined"] += 1
+            raise PoisonedResultError(
+                f"{int(pois.sum())} poisoned result rows"
+                f" (quarantined segment {seg})")
+        if wave.n_real and cov < self.policy.min_coverage:
+            # below the coverage floor: try to win segments back first;
+            # any re-admission earns the wave a retry at the improved
+            # coverage, otherwise its requests FAIL with the achieved
+            # coverage attached (DESIGN.md §11).
+            if self._maintain() > 0:
+                raise CoverageError(
+                    f"coverage {cov:.4f} <"
+                    f" min_coverage {self.policy.min_coverage:.4f};"
+                    " segments recovered, retrying")
+            for r in wave.requests:
+                r.stage = STAGE_FAILED
+                r.error = (f"coverage {cov:.4f} <"
+                           f" min_coverage {self.policy.min_coverage:.4f}")
+                self._failures[r.request_id] = r.error
+            st["failed"] += wave.n_real
+            st["min_coverage_failed"] += wave.n_real
+            return
+        if health is not None:
+            for seg in health.alive():
+                health.record_success(seg)
         done = self.clock()
         shape_key = (wave.base, wave.k, wave.exact, wave.size)
         cold = shape_key not in self._seen_shapes
@@ -470,8 +664,8 @@ class ServingEngine:
         frac_w = float((frac * n_p).sum())
         f32_w = float((f32 * n_p).sum())
         nb_pr, nb_sp, np_pr, np_sp = phases
-        st = self.stats
         st["queries"] += wave.n_real
+        st["coverage_w"] += cov * wave.n_real
         st["batches"] += 1
         st["padded_rows"] += wave.padded_rows
         st["n_b"] += float(n_b.sum())

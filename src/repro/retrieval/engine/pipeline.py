@@ -56,6 +56,7 @@ class Wave:
     cands: object = None             # CandidateSet (device) after stage A
     result: tuple | None = None      # (ids, dists, stats) after stage B
     attempt: int = 0                 # failed executions so far (retry budget)
+    health_gen: int | None = None    # health generation at stage-A dispatch
 
     @property
     def n_real(self) -> int:
@@ -132,13 +133,16 @@ class TwoStagePipeline:
 
     def collect(self, wave: Wave):
         """Materialize one wave on host (the pipeline's only blocking
-        point). Returns (ids, dists, n_b, n_p, frac, f32, phases) sliced
-        to real rows; `f32` is the per-row f32-rows-gathered fraction
-        (DESIGN.md §10 — 1.0 off the compressed two-band path); phases
-        is the per-phase (n_b_probe, n_b_spill, n_p_probe, n_p_spill)
-        attribution from the sharded two-phase search (probe =
+        point). Returns (ids, dists, n_b, n_p, frac, f32, phases, cov,
+        pois) sliced to real rows; `f32` is the per-row f32-rows-gathered
+        fraction (DESIGN.md §10 — 1.0 off the compressed two-band path);
+        phases is the per-phase (n_b_probe, n_b_spill, n_p_probe,
+        n_p_spill) attribution from the sharded two-phase search (probe =
         everything, spill = 0 for monolithic indexes and the independent
-        policy).
+        policy); `cov` is the exact alive-coverage fraction the wave was
+        served at (1.0 for monolithic indexes) and `pois` the per-row
+        NaN/inf poison flags from the sharded query-time guard
+        (DESIGN.md §11 — all-False for monolithic indexes).
         """
         ids, dists, st = wave.result
         n = wave.n_real
@@ -156,7 +160,9 @@ class TwoStagePipeline:
         nb_pr, nb_sp = st.phase_n_b()
         np_pr, np_sp = st.phase_n_p()
         phases = (rows(nb_pr), rows(nb_sp), rows(np_pr), rows(np_sp))
+        cov = float(getattr(st, "coverage_frac", 1.0))
+        pois = rows(getattr(st, "poisoned", 0.0)).astype(bool)
         wave.result = None
         for r in wave.requests:
             r.stage = DONE
-        return ids, dists, n_b, n_p, frac, f32, phases
+        return ids, dists, n_b, n_p, frac, f32, phases, cov, pois

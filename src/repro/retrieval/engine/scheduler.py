@@ -152,9 +152,16 @@ class EnginePolicy:
     # FAILED — total device calls are bounded by (max_retries+1)*(2n-1).
     max_retries: int = 2
     retry_backoff_ms: float = 0.0  # exponential base; ManualClock advances
+    # degraded serving (DESIGN.md §11): minimum acceptable index coverage
+    # fraction for a wave's results. A wave collected below it first
+    # triggers an inline recovery attempt of quarantined segments; if
+    # coverage still cannot be met, its requests are marked FAILED with
+    # the achieved coverage attached. 0.0 = serve at any coverage.
+    min_coverage: float = 0.0
 
     def __post_init__(self):
         assert self.min_bucket >= 1 and self.max_batch >= self.min_bucket
+        assert 0.0 <= self.min_coverage <= 1.0, self.min_coverage
         if self.overload not in (SHED, DEGRADE):
             raise ValueError(f"unknown overload policy {self.overload!r}")
         self.ladder = bucket_ladder(self.min_bucket, self.max_batch)

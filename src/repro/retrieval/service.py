@@ -126,6 +126,9 @@ class UniversalVectorService:
     max_retries: int = 2
     retry_backoff_ms: float = 0.0
     fault_injector: object = None
+    # degraded serving (DESIGN.md §11): coverage floor forwarded to
+    # EnginePolicy.min_coverage (0.0 = serve at any coverage)
+    min_coverage: float = 0.0
     stats: dict = field(default_factory=_empty_stats)
 
     def __post_init__(self):
@@ -146,6 +149,7 @@ class UniversalVectorService:
                 watermark=self.watermark, overload=self.overload,
                 max_retries=self.max_retries,
                 retry_backoff_ms=self.retry_backoff_ms,
+                min_coverage=self.min_coverage,
             )
             self._engine = ServingEngine(self.index, policy,
                                          clock=self.clock, stats=self.stats,
@@ -525,11 +529,26 @@ class UniversalVectorService:
         faults = {key: int(self.stats.get(key, 0))
                   for key in ("faults", "retries", "quarantine_splits",
                               "failed")}
+        # degraded-serving counters (DESIGN.md §11): queries-weighted mean
+        # coverage plus the engine's poison/quarantine/recovery totals and
+        # (for health-tracked indexes) the tracker's own state summary
+        q = int(self.stats.get("queries", 0))
+        health = {
+            "coverage_mean": (float(self.stats.get("coverage_w", 0.0)) / q
+                              if q else 1.0),
+            **{key: int(self.stats.get(key, 0))
+               for key in ("poison_detected", "seg_quarantined",
+                           "seg_recovered", "min_coverage_failed")},
+        }
+        tracker = getattr(self.index, "health", None)
+        if tracker is not None:
+            health["tracker"] = tracker.summary()
         lat = np.asarray(self.stats["latency_ms"], dtype=np.float64)
         if lat.size == 0:
             return {"count": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
                     "max": 0.0, "queue_ms": {}, "compute_ms": {},
-                    "cold_count": 0, "warm": {}, "faults": faults}
+                    "cold_count": 0, "warm": {}, "faults": faults,
+                    "health": health}
         out = {
             "count": int(lat.size),
             "mean": float(lat.mean()),
@@ -537,6 +556,7 @@ class UniversalVectorService:
             "p95": float(np.percentile(lat, 95)),
             "max": float(lat.max()),
             "faults": faults,
+            "health": health,
         }
         recs = list(self.stats["latency_records"])
         if recs:

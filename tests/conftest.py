@@ -5,6 +5,7 @@ see the real single-device CPU backend. Only launch/dryrun.py forces 512
 placeholder devices, and it does so before importing jax.
 """
 
+import jax
 import numpy as np
 import pytest
 
@@ -12,6 +13,23 @@ from repro.core.build import build_hnsw, build_hnsw_bulk
 from repro.core.datasets import make_dataset
 from repro.core.uhnsw import UHNSW, UHNSWParams
 from repro.index import SegmentedGraphs, ShardedUHNSW, build_segments
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_cache():
+    """Drop compiled executables after each test module.
+
+    The CPU XLA JIT keeps every compiled program alive for the whole
+    process; once the suite grew past ~500 tests, the accumulated state
+    reliably segfaulted LLVM inside a later large Pallas compile (the
+    vector-p abandoning-verify program) in single-process `pytest -x -q`
+    runs. Clearing per module bounds the live set to one module's worth.
+    Device arrays are unaffected, so session fixtures (datasets, built
+    graphs) survive; the cost is cross-module recompiles of the shared
+    search programs.
+    """
+    yield
+    jax.clear_caches()
 
 
 @pytest.fixture(scope="session")

@@ -329,6 +329,55 @@ def test_prune_keeps_fallback_window(tmp_path, corpus):
     assert rec.n == len(frozen) + len(streamed)
 
 
+def test_recover_raises_when_all_snapshots_torn(tmp_path, corpus):
+    """Every snapshot torn (CRC fails on each) means there is NO durable
+    baseline: recovery must raise, never hand back an empty or partial
+    index (DESIGN.md §11 — quarantine recovery leans on this guarantee)."""
+    frozen, streamed, _ = corpus
+    dur = DurableIndex.create(_build(frozen), tmp_path)
+    for v in streamed[:14]:                      # rotation -> 2 snapshots
+        dur.add(v)
+    dur.close()
+    snaps = list_snapshots(tmp_path)
+    assert len(snaps) >= 2
+    for _, p in snaps:                           # tear ALL of them
+        f = p / "arrays.npz"
+        f.write_bytes(f.read_bytes()[:64])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert latest_durable_snapshot(tmp_path) is None
+        with pytest.raises(FileNotFoundError):
+            recover(tmp_path)
+        with pytest.raises(FileNotFoundError):
+            DurableIndex.recover(tmp_path)
+
+
+def test_restore_segment_roundtrip_and_mismatch(tmp_path, corpus):
+    """restore_segment re-materializes one segment's rows bit-exactly from
+    the newest durable snapshot (manifest CRC re-verified on the way) and
+    returns False when no snapshot holds that segment's id set."""
+    from repro.index.persist import restore_segment
+    from repro.retrieval.engine.faults import poison_segment
+
+    frozen, _, Q = corpus
+    idx = _build(frozen)
+    want = _search_all_p(idx, Q)
+    DurableIndex.create(idx, tmp_path).close()
+    before = np.array(idx._X_host, copy=True)
+    poison_segment(idx, 1)
+    assert not np.isfinite(np.asarray(idx.segments.X)[1]).all()
+    assert restore_segment(idx, 1, tmp_path) is True
+    np.testing.assert_array_equal(idx._X_host, before)
+    _assert_identical(_search_all_p(idx, Q), want)
+    # a segment whose id set is absent from every snapshot: no restore
+    idx.segments.global_ids[0] = idx.segments.global_ids[0] + 100_000
+    assert restore_segment(idx, 0, tmp_path) is False
+    # and an empty directory has nothing to offer at all
+    empty = tmp_path / "nothing"
+    empty.mkdir()
+    assert restore_segment(idx, 1, empty) is False
+
+
 def test_load_snapshot_rejects_garbage_dir(tmp_path):
     bad = tmp_path / "snapshot_00000000"
     bad.mkdir()

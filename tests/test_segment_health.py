@@ -1,0 +1,484 @@
+"""Segment health + degraded-coverage serving (DESIGN.md §11).
+
+The load-bearing invariant: a degraded search with segment set H masked
+alive is *bitwise identical* to an independent search over an index built
+from only H's segments — same ids, same distances, for every policy and
+every p, delta hits included — and `coverage_frac` is exact. The chaos
+half pins the NaN-poison path: detection at query time, O(log S)
+bisection to the segment, quarantine, recovery from the durable snapshot,
+canary-gated re-admission — and zero poisoned ids ever returned.
+
+Chaos seeds: the CI chaos lane sweeps REPRO_SEGFAULT_SEED so the injector
+schedules differ per matrix entry while each entry stays deterministic.
+"""
+
+import copy
+import os
+import tempfile
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.uhnsw import UHNSWParams
+from repro.index import (
+    HEALTHY,
+    QUARANTINED,
+    RECOVERING,
+    SUSPECT,
+    DurableIndex,
+    HealthPolicy,
+    SegmentedGraphs,
+    SegmentHealthTracker,
+    ShardedUHNSW,
+)
+from repro.index.sharded import ShardedParams
+from repro.retrieval.engine import (
+    EnginePolicy,
+    FaultInjector,
+    ManualClock,
+    ServingEngine,
+    segment_site,
+)
+from repro.retrieval.engine.faults import poison_segment
+
+CHAOS = int(os.environ.get("REPRO_SEGFAULT_SEED", "0"))
+
+P_GRID = [0.5, 1.0, 1.25, 2.0]
+N, D, T = 400, 16, 60
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(11)
+    return rng.standard_normal((N, D)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def base_index(data):
+    """One expensive 4-segment graph build for the whole module; tests
+    wrap its graphs in fresh ShardedUHNSW instances (cheap)."""
+    return ShardedUHNSW.build(data, num_segments=4, m=8,
+                              params=UHNSWParams(t=T), seed=0)
+
+
+def fresh_wrap(base_index, data, deep=False, **kw):
+    """A fresh wrapper over the module build's graphs. deep=True copies
+    the graph objects too, so poison tests can rebind .data without
+    corrupting the shared build."""
+    segs = base_index.segments
+
+    def g(graphs):
+        return [copy.copy(x) for x in graphs] if deep else list(graphs)
+
+    clone = SegmentedGraphs(graphs1=g(segs.graphs1), graphs2=g(segs.graphs2),
+                            global_ids=[i.copy() for i in segs.global_ids])
+    kw.setdefault("params", UHNSWParams(t=T))
+    return ShardedUHNSW(clone, data, **kw)
+
+
+def make_requests(eng, data, n, start=0, p=1.3, k=5):
+    return [eng.make_request(SimpleNamespace(
+        vector=data[(start + i) % len(data)], p=p, k=k,
+        request_id=start + i)) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# health state machine
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_walks_healthy_suspect_quarantined():
+    tr = SegmentHealthTracker(3)
+    assert tr.alive() == [0, 1, 2]
+    # alpha=0.3: failures move the EWMA 0 -> .3 -> .51 -> .657 -> .76
+    tr.record_failure(0)
+    assert tr.state(0) == SUSPECT          # .3 >= suspect_threshold
+    tr.record_failure(0)
+    tr.record_failure(0)
+    assert tr.state(0) == SUSPECT          # .657 < quarantine_threshold
+    tr.record_failure(0)
+    assert tr.state(0) == QUARANTINED      # .76 >= .7
+    assert tr.alive() == [1, 2] and tr.quarantined() == [0]
+    assert tr.counters["quarantined"] == 1
+
+
+def test_success_decays_suspect_back_to_healthy():
+    tr = SegmentHealthTracker(2)
+    tr.record_failure(1)
+    assert tr.state(1) == SUSPECT
+    for _ in range(4):
+        tr.record_success(1)
+    assert tr.state(1) == HEALTHY
+
+
+def test_recovery_requires_probe_streak():
+    tr = SegmentHealthTracker(2, HealthPolicy(probe_successes=2))
+    gen0 = tr.generation
+    tr.quarantine(0)
+    assert tr.generation > gen0            # serving set changed
+    tr.quarantine(0)                       # idempotent
+    assert tr.counters["quarantined"] == 1
+    with pytest.raises(ValueError):
+        tr.readmit(0)                      # not RECOVERING
+    tr.begin_recovery(0)
+    assert tr.state(0) == RECOVERING
+    assert tr.alive() == [1]               # RECOVERING does not serve
+    tr.record_probe(0, True)
+    with pytest.raises(ValueError):
+        tr.readmit(0)                      # streak 1 < 2
+    tr.record_probe(0, False)              # failure resets the streak
+    tr.record_probe(0, True)
+    tr.record_probe(0, True)
+    assert tr.probe_passed(0)
+    gen1 = tr.generation
+    tr.readmit(0)
+    assert tr.state(0) == HEALTHY and tr.generation > gen1
+    assert tr.ewma[0] == 0.0
+
+
+def test_resize_is_grow_only_and_preserves_state():
+    tr = SegmentHealthTracker(2)
+    tr.quarantine(1)
+    tr.resize(4)
+    assert tr.state(1) == QUARANTINED and tr.alive() == [0, 2, 3]
+    with pytest.raises(ValueError):
+        tr.resize(3)
+
+
+# ---------------------------------------------------------------------------
+# satellite: ShardedParams validated at construction
+# ---------------------------------------------------------------------------
+
+
+def test_probe_exceeding_segments_raises(base_index, data):
+    with pytest.raises(ValueError, match="probe"):
+        fresh_wrap(base_index, data,
+                   sharded_params=ShardedParams(policy="two_phase", probe=5))
+    # probe == n_segments is the degenerate-but-legal boundary
+    fresh_wrap(base_index, data,
+               sharded_params=ShardedParams(policy="two_phase", probe=4))
+
+
+def test_thresh_rank_exceeding_t_raises(base_index, data):
+    with pytest.raises(ValueError, match="thresh_rank"):
+        fresh_wrap(base_index, data,
+                   sharded_params=ShardedParams(policy="two_phase", probe=2,
+                                                thresh_rank=T + 1))
+
+
+# ---------------------------------------------------------------------------
+# the §11 parity invariant: degraded == subset-built, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _subset_clone(idx, alive):
+    """An independent index holding only `alive`'s segments, in the SAME
+    global-id space (full data array + copied delta + same id cursor)."""
+    segs = idx.segments
+    sub = ShardedUHNSW(
+        SegmentedGraphs(
+            graphs1=[segs.graphs1[i] for i in alive],
+            graphs2=[segs.graphs2[i] for i in alive],
+            global_ids=[segs.global_ids[i].copy() for i in alive],
+        ),
+        idx._X_host, params=idx.params, sharded_params=idx.sharded_params,
+    )
+    sub._next_id = idx._next_id
+    for v, g in zip(idx.delta.vectors(), idx.delta.ids()):
+        sub.delta.add(np.asarray(v), int(g))
+    return sub
+
+
+@pytest.mark.parametrize("policy_kw", [
+    dict(policy="independent"),
+    dict(policy="two_phase", probe=2),
+    dict(policy="round_robin", probe=2),
+], ids=["independent", "two_phase", "round_robin"])
+def test_degraded_bitwise_equals_subset_index(policy_kw, base_index, data):
+    idx = fresh_wrap(base_index, data, delta_capacity=64,
+                     sharded_params=ShardedParams(**policy_kw))
+    rng = np.random.default_rng(3)
+    for _ in range(5):  # delta hits ride along at reduced coverage
+        idx.add((data.mean(axis=0)
+                 + 3.0 * rng.standard_normal(D)).astype(np.float32))
+    alive = [0, 2, 3]
+    idx.health.quarantine(1)
+    sub = _subset_clone(idx, alive)
+    Q = data[:16]
+    for p in P_GRID:
+        ids_d, dists_d, st_d = idx.search(Q, p, k=8)
+        ids_s, dists_s, st_s = sub.search(Q, p, k=8)
+        np.testing.assert_array_equal(np.asarray(ids_d), np.asarray(ids_s))
+        np.testing.assert_array_equal(np.asarray(dists_d),
+                                      np.asarray(dists_s))
+        assert st_d.degraded and not st_s.degraded
+    # mixed-p vector rides the same programs
+    p_vec = np.array([0.5, 1.0, 1.25, 2.0] * 4, np.float32)
+    ids_d, dists_d, _ = idx.search(Q, p_vec, k=8)
+    ids_s, dists_s, _ = sub.search(Q, p_vec, k=8)
+    np.testing.assert_array_equal(np.asarray(ids_d), np.asarray(ids_s))
+    np.testing.assert_array_equal(np.asarray(dists_d), np.asarray(dists_s))
+
+
+def test_coverage_frac_is_exact(base_index, data):
+    idx = fresh_wrap(base_index, data, delta_capacity=64)
+    sizes = [g.n for g in idx.segments.graphs1]
+    rng = np.random.default_rng(5)
+    for _ in range(5):
+        idx.add(rng.standard_normal(D).astype(np.float32))
+    idx.health.quarantine(1)
+    expect = (sum(sizes) - sizes[1] + 5) / (sum(sizes) + 5)
+    assert idx.coverage_frac() == pytest.approx(expect, abs=1e-12)
+    _, _, st = idx.search(data[:4], 1.3, k=5)
+    assert st.coverage_frac == pytest.approx(expect, abs=1e-12)
+    assert st.degraded
+
+
+# ---------------------------------------------------------------------------
+# NaN poison: query-time guard, canary probes, zero leaked ids
+# ---------------------------------------------------------------------------
+
+
+def test_poison_detected_at_every_p_and_never_returned(base_index, data):
+    idx = fresh_wrap(base_index, data, deep=True)
+    gids = set(map(int, poison_segment(idx, 2)))
+    Q = data[:8]
+    for p in P_GRID:
+        ids, dists, st = idx.search(Q, p, k=5)
+        assert np.asarray(st.poisoned).any(), f"p={p}: guard missed"
+        got = {int(i) for i in np.asarray(ids).ravel() if i >= 0}
+        assert not (got & gids), f"p={p}: poisoned ids leaked"
+        real = np.asarray(ids) >= 0
+        assert np.isfinite(np.asarray(dists)[real]).all()
+
+
+def test_canary_probe_localizes_poison(base_index, data):
+    idx = fresh_wrap(base_index, data, deep=True)
+    poison_segment(idx, 2)
+    assert idx.canary_probe(3, seed=CHAOS) is True
+    assert idx.canary_probe(2, seed=CHAOS) is False
+    # subset probes see only their own segments' poison
+    c_clean = idx.search_stage_candidates(data[:4], 2.0, k=5, alive=[0, 1])
+    c_bad = idx.search_stage_candidates(data[:4], 2.0, k=5, alive=[2, 3])
+    assert not np.asarray(c_clean.poisoned).any()
+    assert np.asarray(c_bad.poisoned).any()
+
+
+# ---------------------------------------------------------------------------
+# engine: bisection to the segment, bounded probes, recovery, floors
+# ---------------------------------------------------------------------------
+
+
+def _durable_engine(data, td, min_coverage=0.0, max_retries=2,
+                    injector=None):
+    idx = ShardedUHNSW.build(data, num_segments=4, m=8,
+                             params=UHNSWParams(t=32), seed=0)
+    dur = DurableIndex.create(idx, td)
+    eng = ServingEngine(
+        dur,
+        EnginePolicy(min_bucket=4, max_batch=16, max_wait_ms=0.0,
+                     max_retries=max_retries, min_coverage=min_coverage),
+        clock=ManualClock(), fault_injector=injector)
+    return dur, eng
+
+
+def test_engine_bisects_poison_to_segment_within_bound(data):
+    with tempfile.TemporaryDirectory() as td:
+        dur, eng = _durable_engine(data, td)
+        eng.serve(make_requests(eng, data, 8))      # warm, clean
+        gids = set(map(int, poison_segment(dur, 2)))
+
+        probes = []
+        orig = dur.index.search_stage_candidates
+
+        def counting(Q, base_p, k=None, alive=None):
+            if alive is not None:
+                probes.append(sorted(alive))
+            return orig(Q, base_p, k=k, alive=alive)
+
+        dur.index.search_stage_candidates = counting
+        out = eng.serve(make_requests(eng, data, 8, start=100))
+        del dur.index.search_stage_candidates
+        assert len(out) == 8 and not eng.failures
+        assert dur.health.state(2) == QUARANTINED
+        assert dur.health.alive() == [0, 1, 3]
+        got = {int(i) for ids, _ in out.values() for i in np.asarray(ids)}
+        assert not (got & gids), "poisoned ids leaked through the engine"
+        # detection bound: ceil(log2 S)+1 = 3 probes per poison event
+        # (one current-alive-set check + the bisection), at most
+        # (max_retries+1) events per wave
+        n_events = eng.stats["poison_detected"] and eng.stats["faults"]
+        assert len(probes) <= (eng.policy.max_retries + 1) * 3
+        assert eng.stats["seg_quarantined"] == 1
+        assert eng.stats["poison_detected"] > 0 and n_events
+
+
+def test_engine_recovers_quarantined_segment_from_snapshot(data):
+    with tempfile.TemporaryDirectory() as td:
+        dur, eng = _durable_engine(data, td)
+        eng.serve(make_requests(eng, data, 4))
+        poison_segment(dur, 1)
+        eng.serve(make_requests(eng, data, 8, start=100))
+        assert dur.health.state(1) == QUARANTINED
+        eng.pump()                      # background maintenance slot
+        assert dur.health.state(1) == HEALTHY
+        assert eng.stats["seg_recovered"] == 1
+        assert dur.coverage_frac() == 1.0
+        # restored rows are byte-identical to the snapshot (checksummed)
+        out = eng.serve(make_requests(eng, data, 4, start=200))
+        assert len(out) == 4 and not eng.failures
+
+
+def test_min_coverage_fails_requests_without_durable_home(base_index, data):
+    idx = fresh_wrap(base_index, data)
+    for seg in (1, 2, 3):
+        idx.health.quarantine(seg)
+    eng = ServingEngine(
+        idx, EnginePolicy(min_bucket=4, max_batch=16, max_wait_ms=0.0,
+                          min_coverage=0.9),
+        clock=ManualClock())
+    out = eng.serve(make_requests(eng, data, 4))
+    assert out == {}
+    fails = eng.take_failures()
+    assert len(fails) == 4
+    for err in fails.values():
+        assert "coverage" in err and "0.9" in err  # coverage attached
+    assert eng.stats["min_coverage_failed"] == 4
+    assert eng.stats["failed"] == 4
+
+
+def test_min_coverage_retries_after_recovery(data):
+    with tempfile.TemporaryDirectory() as td:
+        dur, eng = _durable_engine(data, td, min_coverage=0.9,
+                                   max_retries=3)
+        eng.serve(make_requests(eng, data, 4))
+        poison_segment(dur, 3)
+        # poison -> quarantine -> retry at 0.75 < 0.9 -> inline recovery
+        # -> CoverageError retry -> served at full coverage
+        out = eng.serve(make_requests(eng, data, 8, start=100))
+        assert len(out) == 8 and not eng.failures
+        assert eng.stats["seg_recovered"] >= 1
+        assert dur.health.state(3) == HEALTHY
+        assert eng.stats["min_coverage_failed"] == 0
+
+
+def test_segment_fault_sites_drive_ewma_quarantine(base_index, data):
+    idx = fresh_wrap(base_index, data)
+    inj = FaultInjector(rate=1.0, seed=CHAOS, sites=(segment_site(1),))
+    eng = ServingEngine(
+        idx, EnginePolicy(min_bucket=4, max_batch=16, max_wait_ms=0.0,
+                          max_retries=6),
+        clock=ManualClock(), fault_injector=inj)
+    out = eng.serve(make_requests(eng, data, 4))
+    # rate-1.0 faults on segment 1's site walk its EWMA to quarantine
+    # (4 failures at alpha=0.3), after which its site is no longer drawn
+    # and the wave serves at reduced coverage
+    assert idx.health.state(1) == QUARANTINED
+    assert len(out) == 4 and not eng.failures
+    assert inj.injected_by_site == {segment_site(1): 4}
+    assert eng.stats["seg_quarantined"] == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: injector seeded-schedule + reset contract
+# ---------------------------------------------------------------------------
+
+
+def _schedule(inj, calls):
+    out = []
+    for site in calls:
+        try:
+            inj.check(site)
+            out.append(None)
+        except Exception as e:
+            out.append(type(e).__name__)
+    return out
+
+
+def test_filtered_sites_consume_no_draw():
+    seed = CHAOS * 31 + 5
+    plain = _schedule(FaultInjector(rate=0.5, seed=seed, sites=("search",)),
+                      ["search"] * 20)
+    # interleaving disabled sites (filtered classic + unnamed segment)
+    # must not shift the schedule the enabled site sees
+    mixed_calls = []
+    for _ in range(20):
+        mixed_calls += [segment_site(0), "verify", "search"]
+    mixed = _schedule(FaultInjector(rate=0.5, seed=seed, sites=("search",)),
+                      mixed_calls)
+    assert [o for c, o in zip(mixed_calls, mixed) if c == "search"] == plain
+    assert all(o is None for c, o in zip(mixed_calls, mixed) if c != "search")
+
+
+def test_segment_wildcard_enables_all_segment_sites():
+    inj = FaultInjector(rate=1.0, seed=CHAOS, sites=("segment",))
+    assert inj.enabled(segment_site(0)) and inj.enabled(segment_site(7))
+    assert not inj.enabled("search")    # filter excludes classic sites
+    with pytest.raises(Exception):
+        inj.check(segment_site(3))
+    assert inj.injected_by_site == {segment_site(3): 1}
+
+
+def test_reset_replays_schedule_and_clears_counters():
+    inj = FaultInjector(rate=0.5, timeout_rate=0.2, seed=CHAOS * 7 + 1)
+    calls = ["search", "verify", "collect"] * 10
+    first = _schedule(inj, calls)
+    counts = dict(inj.injected_by_site)
+    assert inj.injected == sum(counts.values()) and inj.injected > 0
+    inj.reset()
+    assert inj.injected == 0 and inj.injected_by_site == {}
+    assert _schedule(inj, calls) == first   # byte-identical replay
+    assert dict(inj.injected_by_site) == counts
+
+
+def test_unknown_site_rejected():
+    with pytest.raises(AssertionError):
+        FaultInjector(sites=("search", "bogus"))
+    FaultInjector(sites=("search", "segment", "segment:3"))  # all legal
+
+
+# ---------------------------------------------------------------------------
+# satellite: durability x quarantine interactions
+# ---------------------------------------------------------------------------
+
+
+def test_wal_replay_into_index_with_quarantined_segments(data):
+    from repro.index.persist import recover
+    with tempfile.TemporaryDirectory() as td:
+        idx = ShardedUHNSW.build(data, num_segments=4, m=8,
+                                 params=UHNSWParams(t=32), seed=0)
+        dur = DurableIndex.create(idx, td)
+        rng = np.random.default_rng(CHAOS)
+        vecs = rng.standard_normal((6, D)).astype(np.float32) * 3
+        added = [dur.add(v) for v in vecs[:3]]
+        dur.health.quarantine(2)         # quarantine mid-stream
+        added += [dur.add(v) for v in vecs[3:]]
+        # delta tier always serves; quarantine only drops frozen coverage
+        for gid, v in zip(added, vecs):
+            ids, _, st = dur.search(v[None], 1.3, k=1)
+            assert int(np.asarray(ids)[0, 0]) == gid
+            assert st.degraded and st.coverage_frac < 1.0
+        dur.close()
+        # recovery replays the WAL into a FRESH health generation: the
+        # quarantine was runtime state, not durable state
+        rec = recover(td, params=UHNSWParams(t=32))
+        assert rec.health.alive() == list(range(rec.num_segments))
+        assert rec.n == dur.n
+        for gid, v in zip(added, vecs):
+            ids, _, st = rec.search(v[None], 1.3, k=1)
+            assert int(np.asarray(ids)[0, 0]) == gid
+            assert not st.degraded
+
+
+def test_compaction_resizes_health_tracker(base_index, data):
+    idx = fresh_wrap(base_index, data, delta_capacity=64)
+    idx.health.quarantine(3)
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        idx.add(rng.standard_normal(D).astype(np.float32))
+    idx.compact()
+    # new frozen segment arrives HEALTHY; old quarantine survives
+    assert idx.health.num_segments == idx.num_segments
+    assert idx.health.state(3) == QUARANTINED
+    assert idx.health.state(idx.num_segments - 1) == HEALTHY
